@@ -1,0 +1,25 @@
+"""Shared benchmark utilities: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows (harness
+contract) plus a human-readable table reproducing its paper table.
+"""
+from __future__ import annotations
+
+import time
+
+
+def time_call(fn, *args, repeats: int = 3, warmup: int = 1, **kw) -> float:
+    """Median wall-time per call in microseconds."""
+    for _ in range(warmup):
+        fn(*args, **kw)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived) -> None:
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,65 @@
+"""Paper Fig. 2 + §III-B: per-sample computation latency of generated
+columns, and functional-simulator throughput (cycle vs event mode).
+
+Latency comes from the calibrated silicon latency model; the simulator
+half times our JAX implementation's two timing modes on the same column —
+quantifying the event-driven speedup the paper's hybrid scheduler exploits.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.configs.tnn_columns import column_config
+from repro.core import column as column_lib
+from repro.core import encoding
+from repro.core.simulator import suggest_threshold
+from repro.data.ucr import PAPER_COLUMNS
+from repro.hwgen import pdk
+
+FITTED = [(65, 2), (96, 2), (152, 2), (270, 25)]  # Fig. 2 + largest column
+
+
+def run() -> list:
+    rows = []
+    for p, q in FITTED:
+        lat = pdk.latency_model_ns(p, q)
+        paper = pdk.PAPER_LATENCY_NS.get((p, q))
+        name = next(n for n, pq in PAPER_COLUMNS.items() if pq == (p, q))
+        cfg = column_config(name)
+        cfg = cfg.with_threshold(suggest_threshold(cfg))
+        ds_x = np.random.default_rng(0).normal(size=(64, cfg.p))
+        volleys = encoding.latency_encode(jax.numpy.asarray(ds_x), cfg.t_max)
+        params = column_lib.init_params(jax.random.key(0), cfg)
+
+        def fwd(mode):
+            y, _ = column_lib.apply(params, volleys, cfg, mode)
+            jax.block_until_ready(y)
+
+        us_event = time_call(fwd, "event")
+        us_cycle = time_call(fwd, "cycle")
+        rows.append({
+            "column": f"{p}x{q}", "latency_ns": lat, "paper_ns": paper,
+            "sim_event_us": us_event, "sim_cycle_us": us_cycle,
+            "event_speedup": us_cycle / max(us_event, 1e-9),
+        })
+    return rows
+
+
+def main(argv=None) -> None:
+    rows = run()
+    print("\n# Fig. 2 — computation latency + simulator mode comparison")
+    print("| column | latency(model) ns | latency(paper) ns | sim event us/64 | sim cycle us/64 | event speedup |")
+    print("|---|---|---|---|---|---|")
+    for r in rows:
+        print(f"| {r['column']} | {r['latency_ns']:.1f} | {r['paper_ns']:.1f} | "
+              f"{r['sim_event_us']:.0f} | {r['sim_cycle_us']:.0f} | "
+              f"{r['event_speedup']:.1f}x |")
+    for r in rows:
+        emit(f"fig2/{r['column']}", r["sim_event_us"],
+             f"latency_ns={r['latency_ns']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Paper Fig. 3 + §III-C: EDA design-flow runtime — ASAP7 vs TNN7 macros.
+
+Reports modeled synthesis and P&R runtimes per design and validates the
+paper's three headline relations the model was pinned to:
+  * ~3x synthesis speedup with TNN7 macros,
+  * ~32% average P&R speedup,
+  * ~47% total-flow reduction for the largest (6750-synapse) design.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs.tnn_columns import all_benchmarks, hardware_spec
+from repro.hwgen import run_flow
+
+
+def run() -> list:
+    rows = []
+    for name in all_benchmarks():
+        spec = hardware_spec(name)
+        asap = run_flow(spec, "asap7")
+        tnn7 = run_flow(spec, "tnn7")
+        rows.append({
+            "benchmark": name, "synapses": asap.synapses,
+            "asap7_synth_s": asap.synth_runtime_s, "tnn7_synth_s": tnn7.synth_runtime_s,
+            "asap7_pnr_s": asap.pnr_runtime_s, "tnn7_pnr_s": tnn7.pnr_runtime_s,
+            "pnr_speedup_pct": 100 * (1 - tnn7.pnr_runtime_s / asap.pnr_runtime_s),
+            "total_speedup_pct": 100 * (1 - tnn7.total_runtime_s / asap.total_runtime_s),
+        })
+    return rows
+
+
+def main(argv=None) -> None:
+    rows = run()
+    print("\n# Fig. 3 — place-and-route runtime (s), ASAP7 vs TNN7")
+    print("| benchmark | syn | P&R ASAP7 | P&R TNN7 | P&R speedup | total speedup |")
+    print("|---|---|---|---|---|---|")
+    for r in rows:
+        print(f"| {r['benchmark']} | {r['synapses']} | {r['asap7_pnr_s']:.0f} | "
+              f"{r['tnn7_pnr_s']:.0f} | {r['pnr_speedup_pct']:.0f}% | "
+              f"{r['total_speedup_pct']:.0f}% |")
+    avg_pnr = sum(r["pnr_speedup_pct"] for r in rows) / len(rows)
+    largest = max(rows, key=lambda r: r["synapses"])
+    synth_x = rows[0]["asap7_synth_s"] / rows[0]["tnn7_synth_s"]
+    print(f"\nsynth speedup {synth_x:.1f}x (paper ~3x); "
+          f"avg P&R speedup {avg_pnr:.0f}% (paper ~32%); "
+          f"largest-design total speedup {largest['total_speedup_pct']:.0f}% (paper ~47%)")
+    for r in rows:
+        emit(f"fig3/{r['benchmark']}", r["asap7_pnr_s"] * 1e6,
+             f"pnr_speedup={r['pnr_speedup_pct']:.0f}%")
+
+
+if __name__ == "__main__":
+    main()

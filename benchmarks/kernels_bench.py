@@ -1,0 +1,57 @@
+"""Kernel-level benchmark: Pallas RNL/STDP kernels vs jnp oracles.
+
+Beyond-paper measurement — the interpreter timings are NOT TPU numbers;
+the derived column reports the kernel's algebraic compute shape (one-hot
+plane matmul MXU FLOPs) that the roofline reasoning in DESIGN.md uses.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.kernels import ref
+from repro.kernels.rnl_response import rnl_fire_pallas
+
+CASES = [(64, 65, 2, 64), (64, 270, 25, 64), (16, 637, 2, 256)]
+
+
+def run() -> list:
+    rows = []
+    rng = np.random.default_rng(0)
+    for B, p, q, t_max in CASES:
+        t_in = jnp.asarray(rng.integers(0, t_max, (B, p)), jnp.int32)
+        w = jnp.asarray(rng.integers(0, 8, (p, q)), jnp.float32)
+        thr = p * 7 / 8
+
+        def k_pallas():
+            jax.block_until_ready(rnl_fire_pallas(t_in, w, thr, t_max, 7))
+
+        def k_ref():
+            jax.block_until_ready(ref.rnl_fire_ref(t_in, w, thr, t_max))
+
+        us_p = time_call(k_pallas)
+        us_r = time_call(k_ref)
+        mxu_flops = 2 * B * 8 * p * q * t_max  # 8 one-hot plane matmuls
+        rows.append({
+            "case": f"B{B}_p{p}_q{q}_t{t_max}",
+            "pallas_us": us_p, "ref_us": us_r, "mxu_flops": mxu_flops,
+        })
+    return rows
+
+
+def main(argv=None) -> None:
+    rows = run()
+    print("\n# Pallas kernels (interpret mode) vs jnp oracle")
+    print("| case | pallas us | oracle us | kernel MXU flops |")
+    print("|---|---|---|---|")
+    for r in rows:
+        print(f"| {r['case']} | {r['pallas_us']:.0f} | {r['ref_us']:.0f} | "
+              f"{r['mxu_flops']:.2e} |")
+    for r in rows:
+        emit(f"kernels/{r['case']}", r["pallas_us"], f"flops={r['mxu_flops']:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""§Roofline report: three-term roofline per (arch x shape) from the
+dry-run artifacts, dominant-bottleneck identification, and the hillclimb
+cell selection.  Writes results/roofline.md and fits the beyond-paper
+RooflineForecaster (the paper's silicon forecasting idea applied to
+compiled cost, DESIGN.md §5).
+
+Run AFTER ``python -m repro.launch.dryrun --all --mesh both``.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import REGISTRY, get_arch
+from repro.hwgen.forecast import RooflineForecaster
+from repro.roofline import analysis
+
+
+def main(argv=None) -> None:
+    rows = analysis.analyze_all(mesh="single")
+    if not rows:
+        print("no dry-run results found — run repro.launch.dryrun first")
+        return
+    md = analysis.render_markdown(rows)
+    os.makedirs("results", exist_ok=True)
+    with open("results/roofline.md", "w") as f:
+        f.write("# Roofline (single-pod 16x16, per-device terms)\n\n" + md)
+    print(md)
+
+    ok = [r for r in rows if r.status == "ok"]
+    if ok:
+        picks = analysis.pick_hillclimb_cells(rows)
+        print("## hillclimb cells")
+        for why, r in picks.items():
+            print(f"  {why}: {r.arch} x {r.shape} "
+                  f"(dominant={r.dominant}, frac={r.roofline_fraction:.3f})")
+
+        # beyond-paper: fit the roofline forecaster on the dry-run table
+        feats, targets = [], {t: [] for t in RooflineForecaster.TERMS}
+        for r in ok:
+            cfg = get_arch(r.arch)
+            feats.append([
+                cfg.param_count() / 1e9,
+                r.model_flops / 1e15,
+                r.n_chips / 256.0,
+            ])
+            targets["compute_s"].append(r.compute_s)
+            targets["memory_s"].append(r.memory_s)
+            targets["collective_s"].append(r.collective_s)
+        if len(feats) >= 4:
+            # fit in log space (terms span 5 orders of magnitude across
+            # train vs decode cells) — same recipe as the paper's silicon
+            # regression, which is also fit on a size-spanning sweep
+            fc = RooflineForecaster()
+            lf = np.log10(np.maximum(np.asarray(feats), 1e-12))
+            lt = {k: np.log10(np.maximum(np.asarray(v), 1e-9))
+                  for k, v in targets.items()}
+            fc.fit(lf, lt)
+            fc.save("results/roofline_forecaster.json")
+            pred = fc.predict(lf)
+            ratio = 10.0 ** np.abs(pred["compute_s"] - lt["compute_s"])
+            print(f"## roofline forecaster (log-space) compute-term fit: "
+                  f"median x{np.median(ratio):.2f} / p90 x{np.percentile(ratio, 90):.2f} "
+                  f"over {len(feats)} cells")
+
+    for r in ok:
+        emit(f"roofline/{r.arch}/{r.shape}", r.bound_s * 1e6,
+             f"dominant={r.dominant};frac={r.roofline_fraction:.3f}")
+
+
+if __name__ == "__main__":
+    main()

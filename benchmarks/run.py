@@ -1,0 +1,63 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table2 fig3 ...]
+
+Emits ``name,us_per_call,derived`` CSV rows (plus human tables) for:
+  table2   — Table II  clustering rand index (TNN / DTCR / k-means)
+  table34  — Tables III+IV  post-P&R leakage + area, 3 libraries
+  fig2     — Fig. 2  computation latency + simulator mode comparison
+  fig3     — Fig. 3  P&R runtime ASAP7 vs TNN7
+  table5   — Table V  area/leakage forecasting + errors
+  kernels  — Pallas kernel sweeps (beyond paper)
+  roofline — §Roofline report from dry-run artifacts (if present)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (
+    fig2_latency,
+    fig3_runtime,
+    kernels_bench,
+    roofline,
+    table2_clustering,
+    table34_silicon,
+    table5_forecast,
+)
+
+MODULES = {
+    "table2": table2_clustering,
+    "table34": table34_silicon,
+    "fig2": fig2_latency,
+    "fig3": fig3_runtime,
+    "table5": table5_forecast,
+    "kernels": kernels_bench,
+    "roofline": roofline,
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", choices=tuple(MODULES), default=None)
+    args = ap.parse_args()
+    failed = []
+    for name, mod in MODULES.items():
+        if args.only and name not in args.only:
+            continue
+        print(f"\n===== {name} =====")
+        try:
+            mod.main([])
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"\nFAILED benchmarks: {failed}")
+        return 1
+    print("\nall benchmarks complete")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,78 @@
+"""Paper Table II: time-series clustering rand index — TNN vs DTCR vs
+k-means across the seven UCR benchmarks.
+
+Reports, per benchmark:
+  * rand index for the TNN column (our JAX simulator, unsupervised STDP),
+  * rand index for k-means (the paper's normalization baseline),
+  * rand index for the DTCR-like deep baseline,
+  * the paper's published normalized values for reference.
+
+Data: real UCR if available (UCR_ROOT), else the synthetic doubles — the
+paper-vs-ours comparison is qualitative on doubles (noted in output).
+Reduced epochs/steps keep this tractable on CPU; flags can raise them.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import emit, time_call
+from repro.clustering.dtcr import DTCRConfig, fit_predict
+from repro.clustering.kmeans import kmeans
+from repro.clustering.metrics import normalized_rand, rand_index
+from repro.configs.tnn_columns import column_config
+from repro.core import simulator
+from repro.data import ucr
+
+
+def run(benchmarks=None, epochs: int = 4, dtcr_steps: int = 60,
+        max_n: int = 240) -> list:
+    rows = []
+    for name in benchmarks or list(ucr.PAPER_COLUMNS):
+        ds = ucr.load(name)
+        x, y = ds.x[:max_n], ds.y[:max_n]
+        k = ds.n_classes
+
+        _, km_labels = kmeans(x, k, seed=0)
+        ri_km = rand_index(y, km_labels)
+
+        cfg = column_config(name)
+        cfg = cfg.with_threshold(simulator.suggest_threshold(cfg))
+        res = simulator.cluster_time_series(x, y, cfg, epochs=epochs)
+
+        dt_labels = fit_predict(x, DTCRConfig(n_clusters=k, steps=dtcr_steps))
+        ri_dtcr = rand_index(y, dt_labels)
+
+        paper = ucr.PAPER_RAND_INDEX[name]
+        rows.append({
+            "benchmark": name, "synthetic": ds.synthetic,
+            "ri_kmeans": ri_km, "ri_tnn": res.rand_index, "ri_dtcr": ri_dtcr,
+            "tnn_norm": normalized_rand(res.rand_index, ri_km),
+            "dtcr_norm": normalized_rand(ri_dtcr, ri_km),
+            "paper_tnn_norm": paper["tnn"], "paper_dtcr_norm": paper["dtcr"],
+            "train_seconds": res.train_seconds,
+        })
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--epochs", type=int, default=4)
+    ap.add_argument("--dtcr-steps", type=int, default=60)
+    ap.add_argument("--benchmarks", nargs="*", default=None)
+    args = ap.parse_args(argv)
+    rows = run(args.benchmarks, args.epochs, args.dtcr_steps)
+    print("\n# Table II — clustering rand index (normalized to k-means)")
+    print("| benchmark | data | TNN | DTCR | TNN(paper) | DTCR(paper) |")
+    print("|---|---|---|---|---|---|")
+    for r in rows:
+        src = "synthetic-double" if r["synthetic"] else "UCR"
+        print(f"| {r['benchmark']} | {src} | {r['tnn_norm']:.3f} | "
+              f"{r['dtcr_norm']:.3f} | {r['paper_tnn_norm']:.3f} | "
+              f"{r['paper_dtcr_norm']:.3f} |")
+    for r in rows:
+        emit(f"table2/{r['benchmark']}", r["train_seconds"] * 1e6,
+             f"tnn_norm={r['tnn_norm']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

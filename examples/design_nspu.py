@@ -1,0 +1,54 @@
+"""Design-space exploration for a custom NSPU (paper's intended workflow).
+
+    PYTHONPATH=src python examples/design_nspu.py
+
+Sweeps column geometry (q neurons) and gamma window for a target sensory
+stream, evaluates clustering quality in the functional simulator, then
+takes the best design through the hardware generator and compares the
+silicon cost of all candidates via forecasting — the "rapid application
+exploration" loop TNNGen §II-A describes.
+"""
+import tempfile
+
+import numpy as np
+
+from repro.clustering.metrics import rand_index
+from repro.core import simulator
+from repro.core.types import ColumnConfig, NeuronConfig
+from repro.data import ucr
+from repro.hwgen import run_flow
+from repro.hwgen.forecast import PaperForecaster
+from repro.hwgen.rtl import ColumnSpec
+
+BENCH = "Beef"  # 470-sample food spectrographs, 5 classes
+
+ds = ucr.load(BENCH)
+L, k = ds.x.shape[1], ds.n_classes
+fc = PaperForecaster()
+
+candidates = []
+for q in (k, 2 * k):
+    for t_max in (32, 64):
+        cfg = ColumnConfig(p=L, q=q, t_max=t_max)
+        cfg = cfg.with_threshold(simulator.suggest_threshold(cfg))
+        res = simulator.cluster_time_series(ds.x[:120], ds.y[:120], cfg, epochs=3)
+        syn = L * q
+        candidates.append({
+            "q": q, "t_max": t_max, "ri": res.rand_index, "synapses": syn,
+            "fc_area_um2": fc.area_um2(syn), "fc_leak_uw": fc.leakage_uw(syn),
+        })
+        print(f"q={q:2d} t_max={t_max:3d}: RI={res.rand_index:.3f} "
+              f"synapses={syn}  forecast area={fc.area_um2(syn):8.0f} um^2 "
+              f"leak={fc.leakage_uw(syn):6.2f} uW")
+
+# quality per silicon area — the NSPU design objective
+best = max(candidates, key=lambda c: c["ri"] / c["fc_area_um2"])
+print(f"\nselected design: q={best['q']} t_max={best['t_max']} "
+      f"(RI {best['ri']:.3f}, forecast {best['fc_area_um2']:.0f} um^2)")
+
+with tempfile.TemporaryDirectory() as build:
+    spec = ColumnSpec(name="beef_nspu", p=L, q=best["q"],
+                      theta=int(L * 7 // 8), t_max=best["t_max"])
+    fr = run_flow(spec, "tnn7", build_root=build)
+    print(f"post-layout: {fr.area_um2:.0f} um^2 ({fr.leakage_uw:.2f} uW), "
+          f"forecast error {100*(best['fc_area_um2']-fr.area_um2)/fr.area_um2:+.1f}%")

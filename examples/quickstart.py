@@ -1,0 +1,48 @@
+"""Quickstart: the TNNGen flow in ~40 lines (paper Fig. 1).
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. Model a TNN column in the functional simulator and cluster a time-series
+   benchmark (paper §II-A / Table II).
+2. Generate its hardware: Verilog RTL + TCL flow scripts + post-layout
+   metrics (paper §II-B / Tables III-IV).
+3. Forecast silicon cost without the flow (paper §III-D / Table V).
+"""
+import tempfile
+
+from repro.clustering.kmeans import kmeans
+from repro.clustering.metrics import normalized_rand, rand_index
+from repro.configs.tnn_columns import column_config, hardware_spec
+from repro.core import simulator
+from repro.data import ucr
+from repro.hwgen import run_flow
+from repro.hwgen.forecast import PaperForecaster
+
+BENCH = "ECG200"
+
+# 1 — functional simulation + clustering ---------------------------------
+ds = ucr.load(BENCH)
+cfg = column_config(BENCH)
+cfg = cfg.with_threshold(simulator.suggest_threshold(cfg))
+res = simulator.cluster_time_series(ds.x, ds.y, cfg, epochs=4)
+_, km = kmeans(ds.x, ds.n_classes)
+ri_km = rand_index(ds.y, km)
+print(f"[1] {BENCH} ({'synthetic double' if ds.synthetic else 'real UCR'}): "
+      f"TNN rand index {res.rand_index:.3f} "
+      f"(normalized to k-means: {normalized_rand(res.rand_index, ri_km):.3f}) "
+      f"in {res.train_seconds:.1f}s")
+
+# 2 — hardware generation -------------------------------------------------
+with tempfile.TemporaryDirectory() as build:
+    fr = run_flow(hardware_spec(BENCH), library="tnn7", build_root=build)
+    print(f"[2] generated RTL+TCL under {fr.build_dir}")
+    print(f"    post-layout (TNN7 7nm): {fr.area_um2:.0f} um^2, "
+          f"{fr.leakage_uw:.2f} uW leakage, {fr.latency_ns:.0f} ns/sample, "
+          f"flow runtime {fr.total_runtime_s:.0f}s")
+
+# 3 — forecasting ----------------------------------------------------------
+fc = PaperForecaster()
+syn = fr.synapses
+print(f"[3] forecast from synapse count alone ({syn}): "
+      f"area {fc.area_um2(syn):.0f} um^2, leakage {fc.leakage_uw(syn):.2f} uW "
+      f"(paper eqns: 5.56*s-94.9 / 0.00541*s-0.725)")

@@ -1,0 +1,56 @@
+"""End-to-end LM training driver: train a ~100M-param model for a few
+hundred steps with the full production runtime (sharded jit when a mesh is
+present, microbatching, async checkpointing, straggler monitor).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+The default config is a ~100M-param granite-style dense decoder (real
+vocab, 8 layers, d_model 512) — sized so a few hundred steps run on CPU in
+minutes.  `--arch/--smoke` selects any registry architecture instead.
+"""
+import argparse
+import dataclasses
+import tempfile
+
+from repro.configs import get_arch
+from repro.data.tokens import DataConfig
+from repro.distributed.train_loop import TrainConfig, Trainer
+from repro.models.config import ArchConfig
+
+
+def default_100m() -> ArchConfig:
+    return ArchConfig(
+        name="granite-100m", family="dense",
+        n_layers=8, d_model=512, n_heads=8, n_kv_heads=2, d_head=64,
+        d_ff=1536, vocab_size=49155, dtype="float32", kv_chunk=256,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    args = ap.parse_args()
+
+    arch = get_arch(args.arch, smoke=True) if args.arch else default_100m()
+    print(f"training {arch.name}: {arch.param_count()/1e6:.0f}M params")
+    dc = DataConfig(vocab_size=arch.vocab_size,
+                    global_batch=args.global_batch, seq_len=args.seq_len)
+    with tempfile.TemporaryDirectory() as d:
+        tc = TrainConfig(steps=args.steps, microbatches=2,
+                         checkpoint_every=100, checkpoint_dir=d,
+                         warmup_steps=20, peak_lr=3e-4)
+        tr = Trainer(arch, dc, tc)
+        out = tr.run()
+        losses = out["losses"]
+        for i in range(0, len(losses), max(1, len(losses) // 10)):
+            print(f"step {i:4d}  loss {losses[i]:.4f}")
+        print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f}); "
+              f"median step {tr.monitor.median_s*1e3:.0f} ms; "
+              f"stragglers flagged: {len(tr.monitor.events)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+# Clustering evaluation substrate for the paper's Table II: rand index,
+# k-means normalization baseline, and a DTCR-like deep baseline.
+from repro.clustering import dtcr, kmeans, metrics  # noqa: F401

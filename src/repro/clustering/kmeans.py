@@ -1,0 +1,57 @@
+"""k-means in JAX (the paper's normalization baseline for Table II)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _plusplus_init(rng: np.random.Generator, x: np.ndarray, k: int) -> np.ndarray:
+    """k-means++ seeding (numpy; tiny and sequential by nature)."""
+    n = x.shape[0]
+    centers = [x[rng.integers(n)]]
+    for _ in range(1, k):
+        d2 = np.min(
+            ((x[:, None, :] - np.stack(centers)[None]) ** 2).sum(-1), axis=1
+        )
+        probs = d2 / max(d2.sum(), 1e-12)
+        centers.append(x[rng.choice(n, p=probs)])
+    return np.stack(centers)
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def _lloyd(x: jnp.ndarray, centers: jnp.ndarray, iters: int):
+    def step(c, _):
+        d2 = ((x[:, None, :] - c[None]) ** 2).sum(-1)  # [n, k]
+        assign = jnp.argmin(d2, axis=1)
+        onehot = jax.nn.one_hot(assign, c.shape[0], dtype=x.dtype)  # [n, k]
+        counts = onehot.sum(0)  # [k]
+        sums = onehot.T @ x  # [k, d]
+        new_c = jnp.where(
+            counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1.0), c
+        )
+        return new_c, None
+
+    centers, _ = jax.lax.scan(step, centers, None, length=iters)
+    d2 = ((x[:, None, :] - centers[None]) ** 2).sum(-1)
+    return centers, jnp.argmin(d2, axis=1)
+
+
+def kmeans(
+    x: np.ndarray, k: int, iters: int = 50, seed: int = 0, restarts: int = 4
+) -> tuple[np.ndarray, np.ndarray]:
+    """k-means with k-means++ init and restarts; returns (centers, labels)."""
+    rng = np.random.default_rng(seed)
+    xj = jnp.asarray(x, jnp.float32)
+    best = None
+    for _ in range(restarts):
+        c0 = jnp.asarray(_plusplus_init(rng, np.asarray(x, np.float64), k), jnp.float32)
+        centers, labels = _lloyd(xj, c0, iters)
+        inertia = float(
+            ((xj - centers[labels]) ** 2).sum()
+        )
+        if best is None or inertia < best[0]:
+            best = (inertia, np.asarray(centers), np.asarray(labels))
+    return best[1], best[2]

@@ -1,0 +1,16 @@
+# The paper's primary contribution: the TNNGen functional simulator —
+# temporal (spike-time) neural networks with RNL/SNL/LIF response functions,
+# WTA inhibition, online STDP, and hybrid event-driven / cycle-accurate
+# timing, implemented in JAX.
+from repro.core.types import (  # noqa: F401
+    ColumnConfig,
+    LayerConfig,
+    NetworkConfig,
+    NeuronConfig,
+    STDPConfig,
+    TIME_DTYPE,
+    WEIGHT_DTYPE,
+    WTAConfig,
+    no_spike,
+)
+from repro.core import column, encoding, network, neuron, simulator, stdp, wta  # noqa: F401

@@ -1,0 +1,109 @@
+"""Single-column TNN: the paper's NSPU building block.
+
+A column is p synapses x q neurons + WTA inhibition + STDP.  Inference for
+one input volley:
+
+  volley [p] --(response fn + threshold)--> spikes [q] --(WTA)--> winners [q]
+
+Training is online: each volley's (input, winner) pair drives one STDP step.
+Weights, being the only state, live in a plain dict pytree.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import neuron, stdp, wta
+from repro.core.types import ColumnConfig, TIME_DTYPE, WEIGHT_DTYPE
+
+
+def init_params(rng: jax.Array, cfg: ColumnConfig) -> dict:
+    """Initialize weights uniformly over [0, w_max] (hardware reset state
+    randomizes the unary counters)."""
+    w = jax.random.uniform(
+        rng, (cfg.p, cfg.q), WEIGHT_DTYPE, 0.0, float(cfg.neuron.w_max)
+    )
+    return {"w": w}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "mode"))
+def apply(
+    params: dict,
+    x_times: jnp.ndarray,
+    cfg: ColumnConfig,
+    mode: str = "auto",
+    rng: Optional[jax.Array] = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Forward one or a batch of volleys.
+
+    Args:
+      params: {'w': [p, q]}.
+      x_times: [..., p] input spike times.
+      cfg: column config.
+      mode: 'auto' | 'event' | 'cycle' simulation mode.
+      rng: only needed for random WTA tie-break.
+
+    Returns:
+      (post-WTA spike times [..., q], winner mask [..., q]).
+    """
+    t_out = neuron.fire_times(x_times, params["w"], cfg.neuron, cfg.t_max, mode)
+    return wta.wta(t_out, cfg.wta, cfg.t_max, rng=rng)
+
+
+def train_step(
+    params: dict,
+    x_times: jnp.ndarray,
+    cfg: ColumnConfig,
+    mode: str = "auto",
+    rng: Optional[jax.Array] = None,
+    y_target: Optional[jnp.ndarray] = None,
+) -> tuple[dict, jnp.ndarray]:
+    """One online training step on a batch of volleys.
+
+    Unsupervised: the WTA winners are the STDP teacher (paper default).
+    Supervised: ``y_target`` [..., q] spike times override the winners.
+
+    Returns (new params, winner spike times).
+    """
+    y, _ = apply(params, x_times, cfg, mode, rng)
+    teacher = y if y_target is None else y_target
+    xb = x_times.reshape((-1, cfg.p))
+    yb = teacher.reshape((-1, cfg.q))
+    w = stdp.stdp_update_batch(
+        params["w"], xb, yb, cfg.stdp, cfg.neuron.w_max, cfg.t_max, rng=rng
+    )
+    return {"w": w}, y
+
+
+def fit(
+    params: dict,
+    x_times: jnp.ndarray,
+    cfg: ColumnConfig,
+    epochs: int = 8,
+    mode: str = "auto",
+    rng: Optional[jax.Array] = None,
+) -> dict:
+    """Run unsupervised STDP for several passes over the dataset [N, p]."""
+    if rng is None:
+        rng = jax.random.key(0)
+    for e in range(epochs):
+        rng, sub = jax.random.split(rng)
+        params, _ = train_step(params, x_times, cfg, mode, rng=sub)
+    return params
+
+
+def cluster_assignments(
+    params: dict, x_times: jnp.ndarray, cfg: ColumnConfig, mode: str = "auto"
+) -> jnp.ndarray:
+    """Winner neuron index per volley = cluster id (paper's clustering use).
+
+    Volleys where no neuron spikes are assigned cluster q (an 'unclustered'
+    bucket), matching the simulator's rand-index accounting.
+    """
+    y, win = apply(params, x_times, cfg, mode)
+    any_spike = win.any(axis=-1)
+    idx = jnp.argmin(y, axis=-1)
+    return jnp.where(any_spike, idx, cfg.q).astype(TIME_DTYPE)

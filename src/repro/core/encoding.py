@@ -1,0 +1,53 @@
+"""Temporal (spike-time) encodings of real-valued signals.
+
+Following Chaudhari et al. (ICASSP'21), a time series of length L feeds a
+single column with p = L synapses; each sample's amplitude is converted to a
+spike *latency* within the gamma window: larger amplitude -> earlier spike.
+An optional on/off-center pair doubles the synapse count and encodes signed
+deviations, mirroring DoG receptive fields in sensory pathways.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.types import TIME_DTYPE
+
+
+def minmax_normalize(x: jnp.ndarray, axis: int = -1, eps: float = 1e-9) -> jnp.ndarray:
+    lo = x.min(axis=axis, keepdims=True)
+    hi = x.max(axis=axis, keepdims=True)
+    return (x - lo) / (hi - lo + eps)
+
+
+def latency_encode(
+    x: jnp.ndarray, t_max: int, normalize: bool = True
+) -> jnp.ndarray:
+    """Intensity-to-latency coding: v in [0,1] -> t = round((1-v)*(t_max-1)).
+
+    Args:
+      x: [..., L] real signal.
+      t_max: gamma window length in cycles.
+
+    Returns:
+      [..., L] int32 spike times in [0, t_max).
+    """
+    v = minmax_normalize(x) if normalize else jnp.clip(x, 0.0, 1.0)
+    t = jnp.round((1.0 - v) * (t_max - 1))
+    return jnp.clip(t, 0, t_max - 1).astype(TIME_DTYPE)
+
+
+def onoff_encode(x: jnp.ndarray, t_max: int) -> jnp.ndarray:
+    """On/off-center pair coding: [..., L] -> [..., 2L] spike times.
+
+    The on channel spikes early for positive deviations from the series mean,
+    the off channel for negative deviations; the silent channel of each pair
+    emits no spike (t_max).
+    """
+    mu = x.mean(axis=-1, keepdims=True)
+    dev = x - mu
+    mag = minmax_normalize(jnp.abs(dev))
+    t = jnp.round((1.0 - mag) * (t_max - 1)).astype(TIME_DTYPE)
+    no = jnp.asarray(t_max, TIME_DTYPE)
+    on = jnp.where(dev >= 0, t, no)
+    off = jnp.where(dev < 0, t, no)
+    return jnp.concatenate([on, off], axis=-1)

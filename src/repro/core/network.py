@@ -1,0 +1,124 @@
+"""Multi-layer TNNs: grids of columns with configurable connectivity.
+
+Paper §II-A: "large multi-layer TNNs with an arbitrary number of layers and
+columns per layer with configurable inter-layer connectivity".  Layer l holds
+``columns`` parallel columns; their post-WTA spike volleys concatenate into
+the next layer's input volley.  Training is greedy layer-wise unsupervised
+STDP (the standard TNN recipe — each layer converges on the spike statistics
+of the layer below).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import column as column_lib
+from repro.core.types import LayerConfig, NetworkConfig, TIME_DTYPE
+
+
+def _layer_input_width(layer: LayerConfig, in_width: int) -> int:
+    if layer.connectivity == "full":
+        return in_width
+    if in_width % layer.columns != 0:
+        raise ValueError(
+            f"tiled connectivity needs in_width % columns == 0, got "
+            f"{in_width} % {layer.columns}"
+        )
+    return in_width // layer.columns
+
+
+def validate(cfg: NetworkConfig, in_width: int) -> None:
+    """Check that declared column widths match the connectivity plan."""
+    width = in_width
+    for li, layer in enumerate(cfg.layers):
+        need = _layer_input_width(layer, width)
+        if layer.column.p != need:
+            raise ValueError(
+                f"layer {li}: column.p={layer.column.p} but connectivity "
+                f"provides {need} inputs"
+            )
+        width = layer.columns * layer.column.q
+
+
+def init_params(rng: jax.Array, cfg: NetworkConfig, in_width: int) -> list:
+    """Per-layer params: list of {'w': [columns, p, q]} stacked over columns."""
+    validate(cfg, in_width)
+    params = []
+    for layer in cfg.layers:
+        rng, sub = jax.random.split(rng)
+        keys = jax.random.split(sub, layer.columns)
+        w = jax.vmap(lambda k: column_lib.init_params(k, layer.column)["w"])(keys)
+        params.append({"w": w})
+    return params
+
+
+def _apply_layer(
+    lp: dict, x: jnp.ndarray, layer: LayerConfig, mode: str
+) -> jnp.ndarray:
+    """x: [..., in_width] -> [..., columns * q] post-WTA spike times."""
+    c = layer.columns
+    if layer.connectivity == "full":
+        xc = jnp.broadcast_to(x[..., None, :], x.shape[:-1] + (c, x.shape[-1]))
+    else:
+        xc = x.reshape(x.shape[:-1] + (c, layer.column.p))
+
+    def one(w, xi):  # w: [p, q]; xi: [..., p]
+        y, _ = column_lib.apply({"w": w}, xi, layer.column, mode)
+        return y
+
+    y = jax.vmap(one, in_axes=(0, -2), out_axes=-2)(lp["w"], xc)
+    return y.reshape(y.shape[:-2] + (c * layer.column.q,))
+
+
+def apply(
+    params: list, x_times: jnp.ndarray, cfg: NetworkConfig, mode: str = "auto"
+) -> jnp.ndarray:
+    """Forward a volley through all layers; returns final spike volley."""
+    h = x_times
+    for lp, layer in zip(params, cfg.layers):
+        h = _apply_layer(lp, h, layer, mode)
+    return h
+
+
+def fit_greedy(
+    params: list,
+    x_times: jnp.ndarray,
+    cfg: NetworkConfig,
+    epochs: int = 8,
+    mode: str = "auto",
+    rng: Optional[jax.Array] = None,
+) -> list:
+    """Greedy layer-wise unsupervised STDP training.
+
+    Each layer is trained to convergence on the (frozen) output of the stack
+    below it, then frozen in turn — the online-learning recipe the hardware
+    implements with per-column local learning only.
+    """
+    if rng is None:
+        rng = jax.random.key(0)
+    h = x_times
+    new_params = []
+    for li, (lp, layer) in enumerate(zip(params, cfg.layers)):
+        c = layer.columns
+        if layer.connectivity == "full":
+            hc = jnp.broadcast_to(h[..., None, :], h.shape[:-1] + (c, h.shape[-1]))
+        else:
+            hc = h.reshape(h.shape[:-1] + (c, layer.column.p))
+
+        w = lp["w"]
+        for e in range(epochs):
+            rng, sub = jax.random.split(rng)
+            keys = jax.random.split(sub, c)
+
+            def one(wi, xi, ki):
+                p, _ = column_lib.train_step(
+                    {"w": wi}, xi, layer.column, mode, rng=ki
+                )
+                return p["w"]
+
+            w = jax.vmap(one, in_axes=(0, -2, 0))(w, hc, keys)
+        new_params.append({"w": w})
+        h = _apply_layer({"w": w}, h, layer, mode)
+    return new_params

@@ -1,0 +1,136 @@
+"""Spike-timing-dependent plasticity for TNN columns.
+
+Implements the classic TNN STDP rule (Smith 2020, arXiv:2011.13844; used by
+Chaudhari et al. ICASSP'21 for time-series clustering).  For synapse (i, j)
+with input spike time x_i and post-WTA output spike time y_j (t_max == none):
+
+  case                         update
+  x and y spike, x <= y        w += mu_capture * s_plus(w)    (capture)
+  x and y spike, x >  y        w -= mu_backoff * s_minus(w)   (backoff)
+  x spikes, y silent           w += mu_search                 (search)
+  x silent, y spikes           w -= mu_backoff * s_minus(w)   (backoff)
+  neither spikes               no change
+
+With the 'half' (bimodal) stabilizer, s_plus(w) = 1 - w/w_max + eps and
+s_minus(w) = w/w_max + eps, which drives converged weights toward the rails
+{0, w_max} — the behaviour the TNN7 unary weight counters implement with
+LFSR-gated increments.  'none' sets both to 1.
+
+Two execution modes:
+  'expected'   — deterministic, applies the expected update (float weights).
+  'stochastic' — Bernoulli(mu * s) unit-magnitude updates via threefry PRNG,
+                 matching the integer LSB increments of the hardware.
+
+Supervised mode simply substitutes the label-derived target spike volley for
+y (the caller picks y; the rule itself is unchanged), as in the paper's
+"supervised and unsupervised modes".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import STDPConfig
+
+
+def _stabilizers(w: jnp.ndarray, w_max: int, cfg: STDPConfig):
+    if cfg.stabilizer == "none":
+        one = jnp.ones_like(w)
+        return one, one
+    frac = jnp.clip(w / w_max, 0.0, 1.0)
+    eps = 1.0 / (2 * w_max)
+    return (1.0 - frac) + eps, frac + eps
+
+
+def stdp_delta(
+    w: jnp.ndarray,
+    x_times: jnp.ndarray,
+    y_times: jnp.ndarray,
+    cfg: STDPConfig,
+    w_max: int,
+    t_max: int,
+) -> jnp.ndarray:
+    """Expected STDP update for one volley.
+
+    Args:
+      w: [p, q] weights.
+      x_times: [p] input spike times.
+      y_times: [q] post-WTA output spike times.
+      cfg: STDP config.
+      w_max: weight ceiling.
+      t_max: window length (>= t_max means no spike).
+
+    Returns:
+      [p, q] weight delta (expected value).
+    """
+    x = x_times[:, None]  # [p, 1]
+    y = y_times[None, :]  # [1, q]
+    xs = x < t_max
+    ys = y < t_max
+    s_plus, s_minus = _stabilizers(w, w_max, cfg)
+
+    capture = xs & ys & (x <= y)
+    backoff = (xs & ys & (x > y)) | (~xs & ys)
+    search = xs & ~ys
+
+    delta = jnp.zeros_like(w)
+    delta = jnp.where(capture, cfg.mu_capture * s_plus, delta)
+    delta = jnp.where(backoff, -cfg.mu_backoff * s_minus, delta)
+    delta = jnp.where(search, cfg.mu_search * jnp.ones_like(w), delta)
+    return delta
+
+
+def stdp_update(
+    w: jnp.ndarray,
+    x_times: jnp.ndarray,
+    y_times: jnp.ndarray,
+    cfg: STDPConfig,
+    w_max: int,
+    t_max: int,
+    rng: jax.Array | None = None,
+) -> jnp.ndarray:
+    """Apply one STDP step and clamp to [0, w_max].
+
+    In 'stochastic' mode the magnitudes of ``stdp_delta`` are treated as
+    per-synapse Bernoulli probabilities of a +/-1 LSB update (hardware
+    semantics); 'expected' applies the float expectation directly.
+    """
+    delta = stdp_delta(w, x_times, y_times, cfg, w_max, t_max)
+    if cfg.mode == "stochastic":
+        if rng is None:
+            raise ValueError("stochastic STDP requires a PRNG key")
+        prob = jnp.clip(jnp.abs(delta), 0.0, 1.0)
+        fire = jax.random.bernoulli(rng, prob)
+        delta = jnp.sign(delta) * fire.astype(w.dtype)
+    return jnp.clip(w + delta, 0.0, float(w_max))
+
+
+def stdp_update_batch(
+    w: jnp.ndarray,
+    x_times: jnp.ndarray,
+    y_times: jnp.ndarray,
+    cfg: STDPConfig,
+    w_max: int,
+    t_max: int,
+    rng: jax.Array | None = None,
+) -> jnp.ndarray:
+    """Sequentially fold a batch of volleys into the weights (online rule).
+
+    x_times: [B, p]; y_times: [B, q].  Hardware processes volleys one gamma
+    window at a time; lax.scan preserves that online semantics exactly.
+    """
+    B = x_times.shape[0]
+    if cfg.mode == "stochastic":
+        if rng is None:
+            raise ValueError("stochastic STDP requires a PRNG key")
+        keys = jax.random.split(rng, B)
+    else:
+        keys = jnp.zeros((B, 2), jnp.uint32)
+
+    def step(wc, inp):
+        xt, yt, key = inp
+        k = key if cfg.mode == "stochastic" else None
+        return stdp_update(wc, xt, yt, cfg, w_max, t_max, rng=k), None
+
+    w_new, _ = jax.lax.scan(step, w, (x_times, y_times, keys))
+    return w_new

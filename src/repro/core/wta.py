@@ -1,0 +1,53 @@
+"""Winner-take-all lateral inhibition over a column's output spikes.
+
+Hardware: a priority encoder over the earliest output spike wavefronts
+(1-WTA), generalized to k-WTA.  Losers' spikes are inhibited (set to
+no-spike); non-spiking neurons can never win.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import TIME_DTYPE, WTAConfig
+
+
+def wta(
+    t_out: jnp.ndarray,
+    cfg: WTAConfig,
+    t_max: int,
+    rng: jax.Array | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Apply k-WTA inhibition.
+
+    Args:
+      t_out: [..., q] output spike times (t_max == no spike).
+      cfg: WTA configuration.
+      t_max: window length.
+      rng: PRNG key, required iff cfg.tie_break == 'random'.
+
+    Returns:
+      (inhibited [..., q] spike times, winner mask [..., q] bool).
+    """
+    q = t_out.shape[-1]
+    t = t_out.astype(jnp.int64) if q * (t_max + 1) > 2**31 else t_out.astype(TIME_DTYPE)
+
+    if cfg.tie_break == "index":
+        rank = jnp.arange(q, dtype=t.dtype)
+        rank = jnp.broadcast_to(rank, t_out.shape)
+    elif cfg.tie_break == "random":
+        if rng is None:
+            raise ValueError("tie_break='random' requires a PRNG key")
+        # independent random ranks per volley
+        u = jax.random.uniform(rng, t_out.shape)
+        rank = jnp.argsort(jnp.argsort(u, axis=-1), axis=-1).astype(t.dtype)
+    else:  # 'all' — ties share the win; rank contributes nothing
+        rank = jnp.zeros(t_out.shape, t.dtype)
+
+    # lexicographic (time, rank) packed into one integer key; for 'all' the
+    # rank is constant so tied times share the k-th key and all win.
+    key = t * q + jnp.minimum(rank, q - 1)
+    kth = jnp.sort(key, axis=-1)[..., cfg.k - 1 : cfg.k]  # [..., 1]
+    win = (key <= kth) & (t_out < t_max)  # non-spiking neurons never win
+    inhibited = jnp.where(win, t_out, t_max).astype(TIME_DTYPE)
+    return inhibited, win

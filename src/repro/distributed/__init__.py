@@ -1,0 +1,11 @@
+# Distributed runtime: sharding rules (DP/FSDP/TP/EP/SP over pod/data/model),
+# optimizers (AdamW, factored Adafactor, int8 error-feedback compression),
+# async checkpointing with elastic restore, straggler monitoring, trainer.
+from repro.distributed import (  # noqa: F401
+    checkpoint,
+    elastic,
+    optimizer,
+    sharding,
+    straggler,
+    train_loop,
+)

@@ -1,0 +1,52 @@
+"""Elastic scaling: resume a run on a different device count / mesh.
+
+The pieces that make this work are deliberately spread across the stack:
+  * checkpoints store host arrays + a manifest (checkpoint.py) — restore
+    re-places leaves under the *current* mesh's shardings;
+  * the data pipeline is addressed by (step, shard, num_shards)
+    (data/tokens.py) — re-sharding is a pure metadata change;
+  * sharding rules are derived from the mesh at build time (sharding.py).
+
+``resume_elastic`` is the orchestration helper the launcher calls after a
+topology change (scale-up, scale-down, or failed-host replacement).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.data.tokens import DataConfig
+from repro.distributed.train_loop import TrainConfig, Trainer
+from repro.models.config import ArchConfig
+
+
+def resume_elastic(
+    arch: ArchConfig,
+    data_cfg: DataConfig,
+    train_cfg: TrainConfig,
+    new_mesh: Optional[jax.sharding.Mesh],
+) -> Trainer:
+    """Build a Trainer on the new mesh; its run() restores the latest
+    checkpoint with the new shardings and continues the step sequence.
+
+    Requirements checked here rather than discovered mid-run:
+      * global batch must divide the new data-parallel shard count,
+      * MoE experts must divide the new model-axis size.
+    """
+    if new_mesh is not None:
+        dp = 1
+        for a in new_mesh.axis_names:
+            if a != "model":
+                dp *= new_mesh.shape[a]
+        if data_cfg.global_batch % dp:
+            raise ValueError(
+                f"global_batch {data_cfg.global_batch} does not divide over "
+                f"{dp} data shards on the new mesh"
+            )
+        if arch.n_experts and arch.n_experts % new_mesh.shape["model"]:
+            raise ValueError(
+                f"{arch.n_experts} experts do not divide over model axis "
+                f"{new_mesh.shape['model']}"
+            )
+    return Trainer(arch, data_cfg, train_cfg, mesh=new_mesh)

@@ -1,0 +1,163 @@
+"""Sharding rules: parameter, activation and cache layouts on the
+production mesh (pod, data, model).
+
+Strategy (see DESIGN.md §6):
+  * TP over ``model``: attention heads / FFN hidden / expert dim / vocab.
+  * EP over ``model``: MoE expert dim (E % model_size == 0 for all archs).
+  * FSDP over (pod, data): the non-TP dim of every large matrix.
+  * DP over (pod, data): the global batch.
+  * SP over ``model``: decode KV caches shard the *sequence* dim (kv-head
+    counts are below the model-axis size for several archs, sequence is
+    not) — flash-decode style; XLA inserts the softmax partial reductions.
+
+Specs are derived from parameter *path names*, so they apply uniformly to
+the layer-stacked pytrees produced by scan-based models.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def fit_axes(size: int, mesh: Mesh, axes: tuple) -> Optional[tuple]:
+    """Largest prefix of ``axes`` whose product divides ``size`` (None if
+    none fits) — lets small batches (e.g. long_500k's batch=1) fall back to
+    replication instead of an invalid sharding."""
+    best: Optional[tuple] = None
+    prod = 1
+    for i, a in enumerate(axes):
+        prod *= mesh.shape[a]
+        if size % prod == 0:
+            best = tuple(axes[: i + 1])
+    return best
+
+
+def _path_names(path) -> list:
+    names = []
+    for e in path:
+        if isinstance(e, jax.tree_util.DictKey):
+            names.append(str(e.key))
+        elif isinstance(e, jax.tree_util.GetAttrKey):
+            names.append(str(e.name))
+    return names
+
+
+# rules: param leaf name -> spec builder over (fsdp_axes,) for the
+# *unstacked* (per-layer) shape; a leading layer-stack dim gets None.
+def _leaf_spec(names: list, ndim: int, fsdp) -> P:
+    name = names[-1]
+    stacked = any(n in ("blocks", "enc_blocks", "cross_blocks") for n in names)
+    base: tuple
+    if name == "embed":
+        base = ("model", fsdp)  # vocab x d_model
+    elif name == "lm_head":
+        base = (fsdp, "model")
+    elif name in ("wq", "wk", "wv", "w_gate", "w_up", "in_proj"):
+        if names[-2] in ("moe",) or ndim - (1 if stacked else 0) == 3:
+            base = ("model", fsdp, None)  # experts [E, D, F]
+        else:
+            base = (fsdp, "model")
+    elif name in ("wo", "w_down", "out_proj"):
+        if names[-2] in ("moe",) or ndim - (1 if stacked else 0) == 3:
+            base = ("model", None, fsdp)  # [E, F, D]
+        else:
+            base = ("model", fsdp)
+    elif name == "router":
+        base = (None, None)
+    elif name == "conv_w":
+        base = (None, "model")
+    elif name in ("a_q",):
+        base = (None, fsdp, None)  # lora [apps, D, r]
+    elif name in ("b_q",):
+        base = (None, None, "model")  # lora [apps, r, Hq]
+    else:
+        # norms, biases, scalars: replicate
+        base = tuple(None for _ in range(ndim))
+        return P(*base)
+    if stacked:
+        base = (None,) + base
+    # pad/truncate to ndim defensively
+    if len(base) < ndim:
+        base = base + tuple(None for _ in range(ndim - len(base)))
+    return P(*base[:ndim])
+
+
+def param_specs(params_tree, mesh: Mesh, serve: bool = False):
+    """PartitionSpec pytree for a (possibly layer-stacked) param tree.
+
+    ``serve=True`` drops the FSDP factor (params replicate over the dp
+    axes, TP/EP over model only): inference has no optimizer state to
+    amortize and the per-layer FSDP weight all-gathers dominate the
+    collective term at small per-step compute (§Perf granite prefill).
+    Weights must then fit HBM without the dp factor — true for every
+    assigned arch except kimi-k2 (which keeps FSDP in serve mode too).
+    """
+    fsdp = None if serve else dp_axes(mesh)
+
+    def spec(path, leaf):
+        return _leaf_spec(_path_names(path), leaf.ndim, fsdp)
+
+    return jax.tree_util.tree_map_with_path(spec, params_tree)
+
+
+def param_shardings(params_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), param_specs(params_tree, mesh)
+    )
+
+
+def batch_specs(batch_tree, mesh: Mesh):
+    """Inputs: batch dim over (pod, data) — or the largest prefix that
+    divides it; M-RoPE positions lead with a size-3 stream dim."""
+    dp = dp_axes(mesh)
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        if names and names[-1] == "positions":
+            b = fit_axes(leaf.shape[1], mesh, dp)
+            return P(None, b, *(None,) * (leaf.ndim - 2))
+        b = fit_axes(leaf.shape[0], mesh, dp)
+        return P(b, *(None,) * (leaf.ndim - 1))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_tree)
+
+
+def cache_specs(cache_tree, mesh: Mesh):
+    """Decode caches: KV tensors [L, B, S, H, dh] shard the *sequence* over
+    model (SP — kv-head counts are often < model-axis size, sequence never
+    is) and batch over (pod, data); SSM states [L, B, H, N, dh] shard heads
+    over model; conv states shard channels over model."""
+    dp = dp_axes(mesh)
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        n = names[-1]
+        if n == "len":
+            return P()
+        b = fit_axes(leaf.shape[1], mesh, dp)
+        if n in ("k", "v", "xk", "xv"):  # [L, B, S, H, dh]
+            s = "model" if leaf.shape[2] % mesh.shape["model"] == 0 else None
+            return P(None, b, s, None, None)
+        if n == "S":  # [L, B, H, N, dh]
+            h = "model" if leaf.shape[2] % mesh.shape["model"] == 0 else None
+            return P(None, b, h, None, None)
+        if n == "conv":  # [L, B, K-1, C]
+            c = "model" if leaf.shape[3] % mesh.shape["model"] == 0 else None
+            return P(None, b, None, c)
+        return P(*(None,) * leaf.ndim)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+
+def logits_spec(mesh: Mesh) -> P:
+    return P(dp_axes(mesh), None, "model")
+
+
+def to_shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree)

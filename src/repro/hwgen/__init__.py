@@ -1,0 +1,7 @@
+# TNNGen hardware generator (paper §II-B): PyTorch-model-spec -> Verilog RTL
+# -> TCL flow scripts -> (simulated) synthesis/P&R -> post-layout metrics,
+# plus the paper's forecasting feature.  See DESIGN.md §2 for what is real
+# (RTL/TCL generation, forecasting) vs modeled (Cadence execution).
+from repro.hwgen import flow, forecast, pdk, rtl, tcl  # noqa: F401
+from repro.hwgen.flow import FlowResult, ModelExecutor, run_flow  # noqa: F401
+from repro.hwgen.rtl import ColumnSpec  # noqa: F401

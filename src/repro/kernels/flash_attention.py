@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: fused causal flash attention (prototype).
+
+The §Perf hillclimbs all converged on the same structural conclusion: the
+dominant memory term of the LM cells is the unfused fp32 score/softmax
+chain that pure-jnp chunked attention materializes per KV block.  This
+kernel keeps the whole online-softmax update (scores, masking, exp,
+running max/denominator, accumulator) in VMEM — the HBM traffic per layer
+collapses to reading Q/K/V once and writing O once.
+
+Layout: grid (batch*kv_head*group, q_blocks); the kernel body loops over
+KV blocks with `jax.lax.fori_loop`, carrying (m, l, acc) in registers/VMEM.
+Block sizes default to (q_blk=128, kv_blk=128) — MXU-aligned.  Causal
+masking skips fully-masked KV blocks via the loop upper bound.
+
+Validated against the pure-jnp oracle (layers.chunked_attention) under the
+Pallas interpreter; on-TPU deployment plugs in via
+``attention(..., impl='pallas')`` (future work — the dry-run's CPU
+cost-model cannot see fusion wins, see EXPERIMENTS.md §Perf cell 2 iter4).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _flash_kernel(
+    q_ref,  # [q_blk, d]
+    k_ref,  # [Skv, d]
+    v_ref,  # [Skv, d]
+    o_ref,  # [q_blk, d]
+    *,
+    kv_blk: int,
+    causal: bool,
+    scale: float,
+):
+    q_blk, d = q_ref.shape
+    skv = k_ref.shape[0]
+    qi = pl.program_id(1)
+    q0 = qi * q_blk
+
+    q = q_ref[...].astype(jnp.float32) * scale
+    n_kv = skv // kv_blk
+    if causal:
+        # only KV blocks that intersect the causal triangle
+        n_kv_needed = (q0 + q_blk + kv_blk - 1) // kv_blk
+    else:
+        n_kv_needed = n_kv
+
+    def body(ki, carry):
+        m, l, acc = carry
+        k = k_ref[pl.dslice(ki * kv_blk, kv_blk), :].astype(jnp.float32)
+        v = v_ref[pl.dslice(ki * kv_blk, kv_blk), :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # [q_blk, kv_blk]
+        if causal:
+            q_pos = q0 + jax.lax.iota(jnp.int32, q_blk)[:, None]
+            kv_pos = ki * kv_blk + jax.lax.iota(jnp.int32, kv_blk)[None, :]
+            s = jnp.where(kv_pos <= q_pos, s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[:, None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * alpha + p.sum(axis=1)
+        acc_new = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((q_blk,), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((q_blk,), jnp.float32)
+    a0 = jnp.zeros((q_blk, d), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_kv_needed, body, (m0, l0, a0))
+    o_ref[...] = (acc / jnp.maximum(l[:, None], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "q_blk", "kv_blk", "interpret")
+)
+def flash_attention_pallas(
+    q: jnp.ndarray,  # [B, Sq, H, d]
+    k: jnp.ndarray,  # [B, Skv, H, d]
+    v: jnp.ndarray,  # [B, Skv, H, d]
+    causal: bool = True,
+    q_blk: int = 128,
+    kv_blk: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused flash attention (MHA layout; GQA callers pre-broadcast K/V).
+
+    Sequence lengths must be multiples of the block sizes (callers pad).
+    Returns [B, Sq, H, d] in q's dtype.
+    """
+    B, Sq, H, d = q.shape
+    Skv = k.shape[1]
+    assert Sq % q_blk == 0 and Skv % kv_blk == 0, (Sq, Skv, q_blk, kv_blk)
+    scale = 1.0 / (d ** 0.5)
+
+    # [B, S, H, d] -> [B*H, S, d]
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, d)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * H, Skv, d)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * H, Skv, d)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, kv_blk=kv_blk, causal=causal, scale=scale
+        ),
+        grid=(B * H, Sq // q_blk),
+        in_specs=[
+            pl.BlockSpec((None, q_blk, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, Skv, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, Skv, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, q_blk, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, d), q.dtype),
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.reshape(B, H, Sq, d).transpose(0, 2, 1, 3)

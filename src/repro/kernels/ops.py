@@ -1,0 +1,93 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``use_pallas`` dispatch: on CPU the kernels run under the Pallas interpreter
+(bit-exact validation); on TPU set ``interpret=False``.  The pure-jnp oracle
+path (``repro.kernels.ref``) is always available as a fallback and is what
+the core library uses for differentiable / fractional-weight paths.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ColumnConfig, TIME_DTYPE
+from repro.kernels import ref
+from repro.kernels.rnl_response import rnl_fire_pallas
+from repro.kernels.stdp_update import stdp_update_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def rnl_fire(
+    t_in: jnp.ndarray,
+    w: jnp.ndarray,
+    threshold: float,
+    t_max: int,
+    w_max: int,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """Firing times for integer-weight RNL neurons. [B,p],[p,q] -> [B,q]."""
+    if not use_pallas:
+        return ref.rnl_fire_ref(t_in, w, threshold, t_max)
+    return rnl_fire_pallas(
+        t_in, w, threshold, t_max, w_max, interpret=not _on_tpu()
+    )
+
+
+def column_forward(
+    params: dict, t_in: jnp.ndarray, cfg: ColumnConfig, use_pallas: bool = True
+) -> jnp.ndarray:
+    """Kernel-backed column forward (integer weights): response + 1-WTA.
+
+    Weights are rounded to the hardware integer grid first (the kernel's
+    one-hot plane decomposition requires w in {0..w_max}).
+    """
+    w = jnp.round(jnp.clip(params["w"], 0.0, cfg.neuron.w_max))
+    t_out = rnl_fire(
+        t_in, w, cfg.neuron.threshold, cfg.t_max, cfg.neuron.w_max, use_pallas
+    )
+    return ref.wta_ref(t_out, cfg.wta.k, cfg.t_max)
+
+
+def stdp_step(
+    w: jnp.ndarray,
+    x_times: jnp.ndarray,
+    y_times: jnp.ndarray,
+    cfg: ColumnConfig,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """Kernel-backed expected-mode STDP update for one volley."""
+    s = cfg.stdp
+    if not use_pallas:
+        return ref.stdp_ref(
+            w, x_times, y_times, s.mu_capture, s.mu_backoff, s.mu_search,
+            cfg.neuron.w_max, cfg.t_max, stabilize=s.stabilizer == "half",
+        )
+    return stdp_update_pallas(
+        w, x_times, y_times, s.mu_capture, s.mu_backoff, s.mu_search,
+        cfg.neuron.w_max, cfg.t_max, stabilize=s.stabilizer == "half",
+        interpret=not _on_tpu(),
+    )
+
+
+def train_volleys(
+    params: dict, x: jnp.ndarray, cfg: ColumnConfig, use_pallas: bool = True
+) -> dict:
+    """Online STDP over a batch of volleys using the fused kernels.
+
+    x: [B, p].  Semantically identical to core/column.train_step with
+    mode='event', integer weights, expected STDP.
+    """
+
+    def step(w, xt):
+        t_out = rnl_fire(
+            xt[None], jnp.round(jnp.clip(w, 0.0, cfg.neuron.w_max)),
+            cfg.neuron.threshold, cfg.t_max, cfg.neuron.w_max, use_pallas,
+        )[0]
+        y = ref.wta_ref(t_out[None], cfg.wta.k, cfg.t_max)[0]
+        return stdp_step(w, xt, y, cfg, use_pallas), None
+
+    w, _ = jax.lax.scan(step, params["w"], x)
+    return {"w": w}

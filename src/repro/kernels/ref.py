@@ -1,0 +1,108 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the semantic ground truth; kernels must match them exactly
+(spike times are integers, so comparisons are equality, not allclose —
+except the STDP update, which is float and checked with allclose).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import TIME_DTYPE
+
+
+def rnl_fire_ref(
+    t_in: jnp.ndarray, w: jnp.ndarray, threshold: float, t_max: int
+) -> jnp.ndarray:
+    """Reference RNL firing times via dense time evaluation.
+
+    V[b, j, t] = sum_i min(relu(t - t_in[b, i]), w[i, j]); the firing time is
+    the first integer t with V >= threshold (t_max if none).  Because V is
+    nondecreasing in t, this equals the count of sub-threshold cycles.
+
+    Args:
+      t_in: [B, p] int spike times (>= t_max means no spike).
+      w: [p, q] non-negative weights (int-valued in hardware).
+      threshold: firing threshold.
+      t_max: window length.
+
+    Returns:
+      [B, q] int32 firing times.
+    """
+    t = jnp.arange(t_max, dtype=jnp.float32)  # [T]
+    # [B, p, T] ramp; min against w per neuron then reduce synapses.
+    a = jax.nn.relu(t[None, None, :] - t_in[:, :, None].astype(jnp.float32))
+    ramp = jnp.minimum(a[:, :, None, :], w[None, :, :, None])  # [B, p, q, T]
+    v = ramp.sum(axis=1)  # [B, q, T]
+    below = (v < threshold).astype(jnp.int32)
+    return below.sum(axis=-1).astype(TIME_DTYPE)  # count of sub-threshold cycles
+
+
+def rnl_fire_ref_planes(
+    t_in: jnp.ndarray, w: jnp.ndarray, threshold: float, t_max: int, w_max: int
+) -> jnp.ndarray:
+    """Oracle for the one-hot weight-plane decomposition (integer weights).
+
+    min(relu(d), w) = relu(d) - sum_v 1[w == v] * relu(d - v)  for w in
+    {0..w_max}: validates the algebra the MXU kernel uses.
+    """
+    t = jnp.arange(t_max, dtype=jnp.float32)
+    a = jax.nn.relu(t[None, None, :] - t_in[:, :, None].astype(jnp.float32))
+    base = a.sum(axis=1)  # [B, T]
+    wi = jnp.round(w).astype(jnp.int32)
+    acc = jnp.zeros((t_in.shape[0], w.shape[1], t_max), jnp.float32)
+    for v in range(w_max + 1):
+        plane = (wi == v).astype(jnp.float32)  # [p, q]
+        acc = acc + jnp.einsum("pq,bpt->bqt", plane, jax.nn.relu(a - v))
+    vbt = base[:, None, :] - acc  # [B, q, T]
+    below = (vbt < threshold).astype(jnp.int32)
+    return below.sum(axis=-1).astype(TIME_DTYPE)
+
+
+def wta_ref(t_out: jnp.ndarray, k: int, t_max: int) -> jnp.ndarray:
+    """Index tie-break k-WTA reference: [B, q] -> [B, q] inhibited times."""
+    q = t_out.shape[-1]
+    key = t_out.astype(jnp.int32) * q + jnp.arange(q, dtype=jnp.int32)
+    kth = jnp.sort(key, axis=-1)[..., k - 1 : k]
+    win = (key <= kth) & (t_out < t_max)
+    return jnp.where(win, t_out, t_max).astype(TIME_DTYPE)
+
+
+def stdp_ref(
+    w: jnp.ndarray,
+    x_times: jnp.ndarray,
+    y_times: jnp.ndarray,
+    mu_capture: float,
+    mu_backoff: float,
+    mu_search: float,
+    w_max: int,
+    t_max: int,
+    stabilize: bool = True,
+) -> jnp.ndarray:
+    """Expected-mode STDP update oracle (mirrors core/stdp.py for one volley).
+
+    Args:
+      w: [p, q]; x_times: [p]; y_times: [q].
+
+    Returns:
+      [p, q] updated (clamped) weights.
+    """
+    x = x_times[:, None]
+    y = y_times[None, :]
+    xs = x < t_max
+    ys = y < t_max
+    if stabilize:
+        frac = jnp.clip(w / w_max, 0.0, 1.0)
+        eps = 1.0 / (2 * w_max)
+        s_plus, s_minus = (1.0 - frac) + eps, frac + eps
+    else:
+        s_plus = s_minus = jnp.ones_like(w)
+    capture = xs & ys & (x <= y)
+    backoff = (xs & ys & (x > y)) | (~xs & ys)
+    search = xs & ~ys
+    delta = jnp.zeros_like(w)
+    delta = jnp.where(capture, mu_capture * s_plus, delta)
+    delta = jnp.where(backoff, -mu_backoff * s_minus, delta)
+    delta = jnp.where(search, mu_search * jnp.ones_like(w), delta)
+    return jnp.clip(w + delta, 0.0, float(w_max))

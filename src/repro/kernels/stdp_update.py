@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: fused expected-mode STDP weight update for one volley.
+
+In silicon this is the per-synapse update unit array (one tiny FSM per
+synapse); on TPU it is a pure VPU elementwise kernel over the [p, q] weight
+tile with two broadcast operands (input spike times along p, output spike
+times along q).  Fusing case-select + stabilizer + clamp into one kernel
+avoids materializing the [p, q] case masks in HBM.
+
+Grid: (p_blocks, q_blocks); every block is independent (embarrassingly
+parallel), lane-aligned on q and sublane-aligned on p.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+SUBLANE = 8
+
+
+def _pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _stdp_kernel(
+    w_ref,  # [p_blk, q_blk] f32
+    x_ref,  # [p_blk, 1]     f32 input spike times (>= t_max: silent)
+    y_ref,  # [1, q_blk]     f32 output spike times
+    out_ref,  # [p_blk, q_blk] f32 updated weights
+    *,
+    mu_capture: float,
+    mu_backoff: float,
+    mu_search: float,
+    w_max: int,
+    t_max: int,
+    stabilize: bool,
+):
+    w = w_ref[...]
+    x = x_ref[...]  # [p_blk, 1] broadcasts over q
+    y = y_ref[...]  # [1, q_blk] broadcasts over p
+    xs = x < t_max
+    ys = y < t_max
+
+    if stabilize:
+        frac = jnp.clip(w * (1.0 / w_max), 0.0, 1.0)
+        eps = 1.0 / (2 * w_max)
+        s_plus = (1.0 - frac) + eps
+        s_minus = frac + eps
+    else:
+        s_plus = s_minus = jnp.ones_like(w)
+
+    capture = xs & ys & (x <= y)
+    backoff = (xs & ys & (x > y)) | ((~xs) & ys)
+    search = xs & (~ys)
+
+    delta = jnp.where(capture, mu_capture * s_plus, 0.0)
+    delta = jnp.where(backoff, -mu_backoff * s_minus, delta)
+    delta = jnp.where(search, mu_search, delta)
+    out_ref[...] = jnp.clip(w + delta, 0.0, float(w_max))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "mu_capture", "mu_backoff", "mu_search", "w_max", "t_max",
+        "stabilize", "p_blk", "q_blk", "interpret",
+    ),
+)
+def stdp_update_pallas(
+    w: jnp.ndarray,
+    x_times: jnp.ndarray,
+    y_times: jnp.ndarray,
+    mu_capture: float,
+    mu_backoff: float,
+    mu_search: float,
+    w_max: int,
+    t_max: int,
+    stabilize: bool = True,
+    p_blk: int = 256,
+    q_blk: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused expected STDP update.  w: [p, q]; x: [p]; y: [q] -> new w."""
+    p, q = w.shape
+    if p <= p_blk:
+        p_pad = p_blk = _pad_to(p, SUBLANE)
+    else:
+        p_pad = _pad_to(p, p_blk)
+    if q <= q_blk:
+        q_pad = q_blk = _pad_to(q, LANE)
+    else:
+        q_pad = _pad_to(q, q_blk)
+
+    wp = jnp.zeros((p_pad, q_pad), jnp.float32).at[:p, :q].set(w)
+    # silent padding: both x and y padded entries use t_max (no spike) so the
+    # "neither spikes" case leaves padded weights untouched.
+    xp = jnp.full((p_pad, 1), float(t_max), jnp.float32).at[:p, 0].set(
+        x_times.astype(jnp.float32)
+    )
+    yp = jnp.full((1, q_pad), float(t_max), jnp.float32).at[0, :q].set(
+        y_times.astype(jnp.float32)
+    )
+
+    grid = (p_pad // p_blk, q_pad // q_blk)
+    out = pl.pallas_call(
+        functools.partial(
+            _stdp_kernel,
+            mu_capture=mu_capture,
+            mu_backoff=mu_backoff,
+            mu_search=mu_search,
+            w_max=w_max,
+            t_max=t_max,
+            stabilize=stabilize,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((p_blk, q_blk), lambda i, j: (i, j)),
+            pl.BlockSpec((p_blk, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, q_blk), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((p_blk, q_blk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((p_pad, q_pad), jnp.float32),
+        interpret=interpret,
+    )(wp, xp, yp)
+    return out[:p, :q]

@@ -1,0 +1,355 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS_EXTRA", "")
+)
+# ^ MUST precede any jax import (device count locks at first init).
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes and record memory/cost/collective analyses.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all [--mesh both] [--jobs 2]
+    python -m repro.launch.dryrun --list
+
+Each cell writes results/dryrun/<arch>__<shape>__<mesh>.json containing:
+  memory_analysis (per-device bytes), cost_analysis (flops / bytes),
+  collective byte totals by op kind (parsed from post-SPMD HLO), and
+  analytic MODEL_FLOPS for the roofline report (benchmarks/roofline.py).
+
+``--all`` fans cells out to subprocesses (fresh XLA per cell: compile RAM
+is returned to the OS, and a pathological cell cannot wedge the sweep).
+"""
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.distributed import sharding
+from repro.distributed.optimizer import Schedule, make_optimizer
+from repro.launch.hlo import collective_bytes_by_kind
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as T
+from repro.models.config import ArchConfig
+
+RESULTS_DIR = "results/dryrun"
+
+
+def _param_shapes(cfg: ArchConfig):
+    return jax.eval_shape(lambda: T.init_params(jax.random.key(0), cfg))
+
+
+def _cache_shapes(cfg: ArchConfig, batch: int, max_len: int):
+    enc = cfg.enc_seq if cfg.family == "audio" else 0
+    return jax.eval_shape(lambda: T.init_cache(cfg, batch, max_len, enc_len=enc))
+
+
+def build_lowered(cfg: ArchConfig, shape: C.ShapeSpec, mesh):
+    """Construct and lower the cell's step function (no allocation)."""
+    T.set_mesh(mesh)
+    p_shapes = _param_shapes(cfg)
+    # serving drops the FSDP factor (kills per-layer weight all-gathers)
+    # whenever the TP-sharded weights fit HBM (everything but kimi-k2)
+    serve = (
+        shape.kind != "train"
+        and cfg.param_count() * 2 / mesh.shape["model"] < 12e9
+    )
+    p_shard = sharding.to_shardings(
+        sharding.param_specs(p_shapes, mesh, serve=serve), mesh
+    )
+    specs = C.input_specs(cfg, shape)
+    b_shard = sharding.to_shardings(sharding.batch_specs(specs, mesh), mesh)
+
+    if shape.kind == "train":
+        opt = make_optimizer(cfg.optimizer, Schedule())
+        o_shapes = jax.eval_shape(
+            lambda: opt.init(jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), p_shapes))
+        )
+        from repro.distributed.train_loop import _opt_specs
+
+        o_shard = sharding.to_shardings(_opt_specs(o_shapes, p_shapes, mesh), mesh)
+
+        def step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: T.loss_fn(p, batch, cfg), has_aux=True
+            )(params)
+            params, opt_state = opt.update(params, grads, opt_state)
+            return params, opt_state, loss
+
+        fn = jax.jit(
+            step,
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, None),
+            donate_argnums=(0, 1),
+        )
+        return fn.lower(p_shapes, o_shapes, specs)
+
+    if shape.kind == "prefill":
+        c_shapes = _cache_shapes(cfg, shape.global_batch, shape.seq_len)
+        c_shard = sharding.to_shardings(sharding.cache_specs(c_shapes, mesh), mesh)
+
+        def step(params, batch):
+            return T.prefill(
+                params, batch["tokens"], cfg, max_len=shape.seq_len,
+                frames=batch.get("frames"),
+            )
+
+        fn = jax.jit(
+            step,
+            in_shardings=(p_shard, b_shard),
+            out_shardings=(c_shard, None),
+        )
+        return fn.lower(p_shapes, specs)
+
+    # decode: one new token against a seq_len cache
+    c_shapes = _cache_shapes(cfg, shape.global_batch, shape.seq_len)
+    c_shard = sharding.to_shardings(sharding.cache_specs(c_shapes, mesh), mesh)
+
+    def step(params, cache, batch):
+        return T.decode_step(params, cache, batch["tokens"], cfg)
+
+    fn = jax.jit(
+        step,
+        in_shardings=(p_shard, c_shard, sharding.to_shardings(
+            sharding.batch_specs(C.input_specs(cfg, shape), mesh), mesh)),
+        out_shardings=(c_shard, None),
+        donate_argnums=(1,),
+    )
+    return fn.lower(p_shapes, c_shapes, specs)
+
+
+def _compile_and_analyze(cfg, shape, mesh) -> dict:
+    t0 = time.time()
+    lowered = build_lowered(cfg, shape, mesh)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                mem_d[k] = int(v)
+    cost = compiled.cost_analysis() or {}
+    cost_d = {k: float(v) for k, v in cost.items()
+              if isinstance(v, (int, float)) and k in
+              ("flops", "bytes accessed", "bytes accessed output",
+               "utilization", "transcendentals")}
+    n_dev = mesh.devices.size
+    coll = collective_bytes_by_kind(compiled.as_text(), total_devices=n_dev)
+    return {
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory_analysis": mem_d, "cost_analysis": cost_d,
+        "collective_bytes": coll,
+    }
+
+
+def _cost_variant(cfg: ArchConfig, units: int, seq_len: int) -> ArchConfig:
+    """Unrolled small variant for per-layer cost measurement.
+
+    units = #layers (dense/moe/vlm/ssm), #superblocks (hybrid: attn_every
+    ssm blocks + 1 shared attn each), or #(enc+dec) layer pairs (audio).
+    unroll_scans=True unrolls BOTH the layer scan and the flash-attention
+    kv-chunk scan, so cost analysis (which counts while bodies once) sees
+    every layer and every kv chunk of the REAL chunked program — kv_chunk
+    stays unchanged so byte counts reflect the flash working set, not a
+    materialized quadratic attention.
+    """
+    kw = dict(unroll_scans=True)
+    if cfg.family == "hybrid":
+        return dataclasses.replace(cfg, n_layers=units * cfg.attn_every, **kw)
+    if cfg.family == "audio":
+        return dataclasses.replace(cfg, n_layers=units, enc_layers=units, **kw)
+    return dataclasses.replace(cfg, n_layers=units, **kw)
+
+
+def _full_units(cfg: ArchConfig) -> float:
+    if cfg.family == "hybrid":
+        n_apps = cfg.n_layers // cfg.attn_every
+        tail = cfg.n_layers - n_apps * cfg.attn_every
+        return n_apps + tail / cfg.attn_every  # tail ssm blocks ~ fractional
+    return float(cfg.n_layers)
+
+
+def _extrapolate(c1: dict, c2: dict, u1: int, u2: int, units: float) -> dict:
+    """Linear-in-units extrapolation from unrolled variants at u1 < u2
+    units: per_unit = (c(u2) - c(u1)) / (u2 - u1), total(u) = c(u1) +
+    (u - u1) * per_unit.  Per-unit deltas are clamped at >= 0 (XLA
+    sometimes optimizes small variants differently; a negative slope is an
+    artifact, not physics)."""
+    du = float(u2 - u1)
+
+    def extrap(a, b):
+        per = max((b - a) / du, 0.0)
+        return a + (units - u1) * per, per
+
+    out = {}
+    for key in ("flops", "bytes accessed", "transcendentals"):
+        a = c1["cost_analysis"].get(key)
+        b = c2["cost_analysis"].get(key)
+        if a is not None and b is not None:
+            out[key], _ = extrap(a, b)
+    coll = {}
+    for k in c1["collective_bytes"]:
+        if k in ("counts", "largest", "total"):
+            continue
+        coll[k], _ = extrap(c1["collective_bytes"][k], c2["collective_bytes"][k])
+    coll["total"] = sum(v for k, v in coll.items() if k != "total")
+    out["collective_bytes"] = coll
+    out["units_full"] = units
+    out["per_unit"] = {
+        "flops": max(
+            (c2["cost_analysis"].get("flops", 0.0)
+             - c1["cost_analysis"].get("flops", 0.0)) / du, 0.0),
+        "collective_total": max(
+            (c2["collective_bytes"]["total"]
+             - c1["collective_bytes"]["total"]) / du, 0.0),
+    }
+    return out
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str,
+             with_cost_variants: bool = None) -> dict:
+    cfg = C.get_arch(arch_id)
+    shape = C.SHAPES[shape_name]
+    reason = C.skip_reason(cfg, shape_name)
+    if reason:
+        return {"arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": reason}
+
+    if with_cost_variants is None:
+        # the roofline table is single-pod; multi-pod cells only need the
+        # main compile (the pod-axis sharding proof)
+        with_cost_variants = mesh_kind == "single"
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    main = _compile_and_analyze(cfg, shape, mesh)
+
+    n_chips = 512 if mesh_kind == "multi" else 256
+    toks = shape.global_batch * (shape.seq_len if shape.kind == "train" else 1)
+    result = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+        "status": "ok",
+        "n_chips": n_chips,
+        "tokens_per_step": toks,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "model_flops_per_step": cfg.model_flops_per_token() * toks
+        * (3.0 if shape.kind == "train" else 1.0),
+        **main,
+    }
+    print(f"[dryrun] {arch_id} x {shape_name} x {mesh_kind}: "
+          f"compile {main['compile_s']:.0f}s")
+    print(f"  memory_analysis: {main['memory_analysis']}")
+    print(f"  cost_analysis:   {main['cost_analysis']}")
+    print(f"  collectives:     {main['collective_bytes']}")
+
+    if with_cost_variants:
+        # per-layer cost from unrolled 1- and 2-unit variants (while bodies
+        # are otherwise counted once by HloCostAnalysis; see launch/hlo.py)
+        u1, u2 = 2, 4
+        c1 = _compile_and_analyze(_cost_variant(cfg, u1, shape.seq_len), shape, mesh)
+        c2 = _compile_and_analyze(_cost_variant(cfg, u2, shape.seq_len), shape, mesh)
+        result["extrapolated"] = _extrapolate(c1, c2, u1, u2, _full_units(cfg))
+        result["cost_variants"] = {"c1": c1, "c2": c2}
+        print(f"  extrapolated:    {result['extrapolated']}")
+    return result
+
+
+def save_result(res: dict) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(
+        RESULTS_DIR, f"{res['arch']}__{res['shape']}__{res['mesh']}.json"
+    )
+    with open(path, "w") as f:
+        json.dump(res, f, indent=2)
+    return path
+
+
+def all_cells(meshes=("single", "multi")) -> list:
+    cells = []
+    for arch_id in C.ARCH_IDS:
+        cfg = C.get_arch(arch_id)
+        for shape_name in C.SHAPES:
+            for mesh_kind in meshes:
+                cells.append((arch_id, shape_name, mesh_kind))
+    return cells
+
+
+def _run_all(meshes, jobs: int, force: bool) -> int:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    todo = []
+    for arch_id, shape_name, mesh_kind in all_cells(meshes):
+        path = os.path.join(
+            RESULTS_DIR, f"{arch_id}__{shape_name}__{mesh_kind}.json"
+        )
+        if not force and os.path.exists(path):
+            continue
+        todo.append((arch_id, shape_name, mesh_kind))
+    print(f"[dryrun] {len(todo)} cells to run, {jobs} jobs")
+    procs: list = []
+    failed = []
+    while todo or procs:
+        while todo and len(procs) < jobs:
+            a, s, m = todo.pop(0)
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", a, "--shape", s, "--mesh", m]
+            procs.append(((a, s, m), subprocess.Popen(cmd)))
+            print(f"[dryrun] started {a} x {s} x {m}")
+        time.sleep(2)
+        still = []
+        for cell, p in procs:
+            if p.poll() is None:
+                still.append((cell, p))
+            elif p.returncode != 0:
+                failed.append(cell)
+                print(f"[dryrun] FAILED {cell}")
+            else:
+                print(f"[dryrun] done {cell}")
+        procs = still
+    if failed:
+        print(f"[dryrun] {len(failed)} failures: {failed}")
+        return 1
+    print("[dryrun] all cells complete")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=C.ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(C.SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--jobs", type=int, default=2)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        for cell in all_cells():
+            print(*cell)
+        return 0
+    if args.all:
+        meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+        return _run_all(meshes, args.jobs, args.force)
+    assert args.arch and args.shape, "--arch/--shape required without --all"
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    for m in meshes:
+        res = run_cell(args.arch, args.shape, m)
+        save_result(res)
+        if res["status"] not in ("ok", "skipped"):
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

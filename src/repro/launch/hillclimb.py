@@ -1,0 +1,91 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS_EXTRA", "")
+)
+# ^ MUST precede any jax import (device count locks at first init).
+"""§Perf hillclimb harness: re-measure one dry-run cell under a config
+override and report the three roofline terms for before/after logging.
+
+    python -m repro.launch.hillclimb --arch kimi-k2-1t-a32b --shape train_4k \
+        --set moe_impl=ragged --tag baseline_ragged
+
+Writes results/perf/<arch>__<shape>__<tag>.json and prints the terms.
+Overrides are dataclasses.replace fields on the arch's full() config.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+
+
+def _coerce(cfg, key: str, val: str):
+    f = {f.name: f for f in dataclasses.fields(cfg)}[key]
+    t = f.type if isinstance(f.type, type) else type(getattr(cfg, key))
+    cur = getattr(cfg, key)
+    if isinstance(cur, bool):
+        return val.lower() in ("1", "true", "yes")
+    if isinstance(cur, int):
+        return int(val)
+    if isinstance(cur, float):
+        return float(val)
+    return val
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    ap.add_argument("--set", nargs="*", default=[], metavar="KEY=VALUE")
+    ap.add_argument("--tag", required=True)
+    args = ap.parse_args()
+
+    import repro.configs as C
+    from repro.launch import dryrun
+    from repro.launch.mesh import make_production_mesh
+    from repro.roofline import analysis
+
+    cfg = C.get_arch(args.arch)
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = _coerce(cfg, k, v)
+    cfg = dataclasses.replace(cfg, **overrides)
+
+    shape = C.SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    main_res = dryrun._compile_and_analyze(cfg, shape, mesh)
+    u1, u2 = 2, 4
+    c1 = dryrun._compile_and_analyze(dryrun._cost_variant(cfg, u1, shape.seq_len), shape, mesh)
+    c2 = dryrun._compile_and_analyze(dryrun._cost_variant(cfg, u2, shape.seq_len), shape, mesh)
+    ex = dryrun._extrapolate(c1, c2, u1, u2, dryrun._full_units(cfg))
+
+    cell = {
+        "arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+        "status": "ok", "n_chips": 512 if args.mesh == "multi" else 256,
+        "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+        "tag": args.tag, "overrides": overrides,
+        **main_res, "extrapolated": ex,
+    }
+    row = analysis.analyze_cell(cell)
+    cell["roofline"] = {
+        "compute_s": row.compute_s, "memory_s": row.memory_s,
+        "collective_s": row.collective_s, "dominant": row.dominant,
+        "useful_ratio": row.useful_ratio,
+        "roofline_fraction": row.roofline_fraction,
+        "peak_mem_gb": row.peak_mem_gb,
+    }
+    os.makedirs("results/perf", exist_ok=True)
+    path = f"results/perf/{args.arch}__{args.shape}__{args.tag}.json"
+    with open(path, "w") as f:
+        json.dump(cell, f, indent=2)
+    print(f"[hillclimb] {args.tag}: compute={row.compute_s:.4f}s "
+          f"memory={row.memory_s:.4f}s collective={row.collective_s:.4f}s "
+          f"dominant={row.dominant} frac={row.roofline_fraction:.4f} "
+          f"peak={row.peak_mem_gb:.1f}GB -> {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

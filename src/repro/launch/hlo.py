@@ -1,0 +1,113 @@
+"""Post-SPMD HLO analysis: collective byte accounting for the roofline.
+
+``cost_analysis`` does not expose collective traffic, so we parse the
+compiled module text.  Per-device wire-byte accounting with ring algorithms
+over a group of N participants (result shape R bytes is always printed;
+operand shapes often are not):
+
+  all-gather          R * (N-1)/N        (result is the gathered buffer)
+  all-reduce          R * 2(N-1)/N       (reduce-scatter + all-gather phases)
+  reduce-scatter      R * (N-1)          (operand = N*R, each device sends
+                                          (N-1)/N of it)
+  all-to-all          R * (N-1)/N
+  collective-permute  R                  (point-to-point)
+
+Group size N comes from ``replica_groups``: iota form `[G,N]<=[...]`,
+explicit `{{0,1},{2,3}}`, or empty (= all devices).  NOTE: ops inside
+`while` bodies are counted ONCE — the roofline pipeline therefore measures
+per-layer costs on UNROLLED 1/2-layer variants and extrapolates (see
+launch/dryrun.py and benchmarks/roofline.py).
+"""
+from __future__ import annotations
+
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|c64|c128)\[([0-9,]*)\]"
+)
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_EXPLICIT_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _result_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _EXPLICIT_GROUPS_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return max(total_devices, 1)
+
+
+def collective_bytes_by_kind(hlo_text: str, total_devices: int = 1) -> dict:
+    """Sum per-device collective wire bytes by op kind from compiled HLO.
+
+    '-done' ops are skipped (async pairs would double count with their
+    '-start').  Returns {kind: bytes, 'total': ..., 'counts': {...}}.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    largest: list = []
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        result_text, kind, _start = m.groups()
+        r = _result_bytes(result_text)
+        n = _group_size(line, total_devices)
+        if kind == "all-gather":
+            b = r * (n - 1) // max(n, 1)
+        elif kind == "all-reduce":
+            b = 2 * r * (n - 1) // max(n, 1)
+        elif kind == "reduce-scatter":
+            b = r * (n - 1)
+        elif kind == "all-to-all":
+            b = r * (n - 1) // max(n, 1)
+        else:  # collective-permute
+            b = r
+        out[kind] += b
+        counts[kind] += 1
+        meta = ""
+        mm = re.search(r'op_name="([^"]{0,120})', line)
+        if mm:
+            meta = mm.group(1)
+        largest.append((b, kind, result_text.strip()[:60], meta))
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts
+    largest.sort(key=lambda t: -t[0])
+    out["largest"] = [
+        {"bytes": b, "kind": k, "shape": sh, "op": op}
+        for b, k, sh, op in largest[:8]
+    ]
+    return out

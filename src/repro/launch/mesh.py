@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state; callers decide when devices are materialized.
+
+Topology targeted: TPU v5e pods — 16x16 (256 chips) per pod; the multi-pod
+mesh adds a leading "pod" axis (2 pods = 512 chips).  Axis semantics:
+  pod   — data parallelism across pods (DCN links; gradient compression
+          applies here),
+  data  — FSDP + data parallelism within a pod,
+  model — TP / EP / SP.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple, axes: tuple):
+    """Arbitrary meshes for elastic-scaling tests and CPU smokes."""
+    return jax.make_mesh(shape, axes)

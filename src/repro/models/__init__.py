@@ -1,0 +1,4 @@
+# LM-architecture substrate: the 10 assigned architectures as one functional
+# model with family dispatch (dense / moe / ssm / hybrid / audio / vlm).
+from repro.models import config, layers, moe, ssm, transformer  # noqa: F401
+from repro.models.config import ArchConfig  # noqa: F401

@@ -1,0 +1,286 @@
+"""Shared transformer layers: norms, RoPE / M-RoPE, chunked flash attention
+(train/prefill), cached decode attention, SwiGLU MLP.
+
+All layers are pure functions over param dicts; weights are created by
+``init_*`` functions and stored bf16 (compute in bf16, reductions fp32).
+Attention uses an online-softmax KV-chunked scan (flash-attention algorithm
+in pure JAX) so the working set stays linear in sequence length — required
+for the 32k prefill cells and a better roofline than materialized scores.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+
+Initializer = jax.nn.initializers.Initializer
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def dense_init(rng, shape, dtype, scale: float = 1.0):
+    fan_in = shape[0]
+    return (jax.random.normal(rng, shape) * (scale / jnp.sqrt(fan_in))).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+def rmsnorm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
+
+
+# --------------------------------------------------------------------------
+# RoPE / M-RoPE
+# --------------------------------------------------------------------------
+def rope_freqs(d_head: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, jnp.float32) / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [B, S, H, d]; positions: [B, S] -> rotated x."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # [d/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, d/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    r1 = xf1 * cos - xf2 * sin
+    r2 = xf2 * cos + xf1 * sin
+    return jnp.stack([r1, r2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+def apply_mrope(
+    x: jnp.ndarray, positions: jnp.ndarray, theta: float, sections=(16, 24, 24)
+) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE: positions [3, B, S] (t, h, w streams), the
+    head dim is split into three frequency sections, one per stream.
+    ``sections`` are half-dim section sizes (sum == d_head // 2)."""
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    freqs = rope_freqs(d, theta)  # [d/2]
+    # pick which stream drives each frequency pair
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=d // 2
+    )  # [d/2]
+    pos = positions.astype(jnp.float32)  # [3, B, S]
+    ang_all = pos[..., None] * freqs  # [3, B, S, d/2]
+    # per-frequency-pair stream selection via one-hot contraction
+    ang = jnp.einsum("sbtd,ds->btd", ang_all, jax.nn.one_hot(sec_id, 3))
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    r1 = xf1 * cos - xf2 * sin
+    r2 = xf2 * cos + xf1 * sin
+    return jnp.stack([r1, r2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention
+# --------------------------------------------------------------------------
+def init_attention(rng, cfg: ArchConfig, d_model: Optional[int] = None) -> dict:
+    D = d_model or cfg.d_model
+    dh, Hq, Hkv = cfg.d_head, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(rng, 4)
+    dt = _dtype(cfg)
+    p = {
+        "wq": dense_init(ks[0], (D, Hq * dh), dt),
+        "wk": dense_init(ks[1], (D, Hkv * dh), dt),
+        "wv": dense_init(ks[2], (D, Hkv * dh), dt),
+        "wo": dense_init(ks[3], (Hq * dh, D), dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dt)
+        p["k_norm"] = jnp.ones((dh,), dt)
+    return p
+
+
+def _merge_gqa(q: jnp.ndarray, n_kv: int) -> jnp.ndarray:
+    """[B, S, Hq, d] -> [B, S, Hkv, G, d]."""
+    B, S, Hq, d = q.shape
+    return q.reshape(B, S, n_kv, Hq // n_kv, d)
+
+
+def chunked_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool,
+    q_offset: int = 0,
+    kv_chunk: int = 1024,
+    unroll: bool = False,
+    bf16_scores: bool = False,
+) -> jnp.ndarray:
+    """Online-softmax (flash) attention via a scan over KV chunks.
+
+    q: [B, Sq, Hkv, G, d]; k/v: [B, Skv, Hkv, d].  Returns [B, Sq, Hkv, G, d].
+    ``q_offset`` is the absolute position of q[0] (for causal masking during
+    chunked prefill / decode).  Memory: O(Sq * kv_chunk) per head instead of
+    O(Sq * Skv).
+    """
+    B, Sq, Hkv, G, d = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    n_chunks = -(-Skv // kv_chunk)
+    pad = n_chunks * kv_chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, kv_chunk, Hkv, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, kv_chunk, Hkv, d).transpose(1, 0, 2, 3, 4)
+
+    q_pos = q_offset + jnp.arange(Sq)
+
+    # scores in bf16 (optional) with fp32 running max/denominator/accumulator
+    sd = jnp.bfloat16 if bf16_scores else jnp.float32
+    neg = jnp.asarray(-jnp.inf, sd)
+
+    def step(carry, inp):
+        m, l, acc = carry  # [B,Sq,Hkv,G], [B,Sq,Hkv,G], [B,Sq,Hkv,G,d]
+        kci, vci, c_idx = inp
+        kv_pos = c_idx * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum(
+            "bqhgd,bkhd->bqhgk", q, kci, preferred_element_type=sd
+        ) * scale.astype(sd)
+        valid = kv_pos[None, :] < Skv  # mask kv padding
+        if causal:
+            valid = valid & (kv_pos[None, :] <= q_pos[:, None])
+        s = jnp.where(valid[None, :, None, None, :], s, neg)
+        m_new = jnp.maximum(m, s.max(axis=-1).astype(jnp.float32))
+        # guard fully-masked rows (m_new == -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None].astype(sd))  # [.., kc] in sd
+        p = jnp.where(valid[None, :, None, None, :], p, jnp.asarray(0, sd))
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * alpha + jnp.sum(p, axis=-1, dtype=jnp.float32)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p.astype(v.dtype), vci,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, Hkv, G), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, G, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks)), unroll=unroll
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.astype(q.dtype)
+
+
+def attention(
+    params: dict,
+    x: jnp.ndarray,
+    cfg: ArchConfig,
+    positions: jnp.ndarray,
+    causal: bool = True,
+    kv_cache: Optional[dict] = None,
+    cross_kv: Optional[tuple] = None,
+) -> tuple[jnp.ndarray, Optional[dict]]:
+    """GQA attention, all modes.
+
+    * training / prefill: kv_cache is None -> chunked flash attention.
+    * decode: kv_cache = {'k','v','len'} -> append one step, attend to cache.
+    * cross-attention: cross_kv = (k, v) precomputed from the encoder.
+
+    x: [B, S, D]; positions: [B, S] (or [3, B, S] for mrope).
+    Returns (out [B, S, D], updated kv_cache or None).
+    """
+    B, S, D = x.shape
+    dh, Hq, Hkv = cfg.d_head, cfg.n_heads, cfg.n_kv_heads
+    q = (x @ params["wq"]).reshape(B, S, Hq, dh)
+    if cross_kv is None:
+        k = (x @ params["wk"]).reshape(B, S, Hkv, dh)
+        v = (x @ params["wv"]).reshape(B, S, Hkv, dh)
+    else:
+        k, v = cross_kv
+
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"])
+        if cross_kv is None:
+            k = rmsnorm(k, params["k_norm"])
+
+    if cross_kv is None:  # rope only applies to self-attention
+        if cfg.mrope:
+            q = apply_mrope(q, positions, cfg.rope_theta, _mrope_sections(dh))
+            k = apply_mrope(k, positions, cfg.rope_theta, _mrope_sections(dh))
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if kv_cache is not None:
+        # serving: append this step's k/v into the cache at index 'len'
+        idx = kv_cache["len"]
+        ck = jax.lax.dynamic_update_slice_in_dim(kv_cache["k"], k, idx, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(kv_cache["v"], v, idx, axis=1)
+        new_cache = {"k": ck, "v": cv, "len": idx + S}
+        if S > 1:
+            # prefill (assumes an empty cache, idx == 0): causal chunked
+            # flash attention over the prompt only — O(S * kv_chunk) memory.
+            qg = _merge_gqa(q, Hkv)
+            o = chunked_attention(
+                qg, k, v, causal=True, kv_chunk=cfg.kv_chunk,
+                unroll=cfg.unroll_scans, bf16_scores=cfg.attn_bf16_scores,
+            )
+        else:
+            # decode: attend to the whole cache, masking beyond 'len' + S
+            # and keeping causality within the step.
+            k, v = ck, cv
+            qg = _merge_gqa(q, Hkv)
+            s = jnp.einsum(
+                "bqhgd,bkhd->bqhgk", qg, k, preferred_element_type=jnp.float32
+            ) / jnp.sqrt(dh)
+            kv_pos = jnp.arange(k.shape[1])
+            q_pos = idx + jnp.arange(S)
+            valid = kv_pos[None, :] <= q_pos[:, None]
+            s = jnp.where(valid[None, :, None, None, :], s, -jnp.inf)
+            p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+            o = jnp.einsum("bqhgk,bkhd->bqhgd", p, v)
+    else:
+        qg = _merge_gqa(q, Hkv)
+        o = chunked_attention(
+            qg, k, v, causal=causal and cross_kv is None,
+            kv_chunk=cfg.kv_chunk, unroll=cfg.unroll_scans,
+            bf16_scores=cfg.attn_bf16_scores,
+        )
+    o = o.reshape(B, S, Hq * dh)
+    return o @ params["wo"], new_cache
+
+
+def _mrope_sections(d_head: int) -> tuple:
+    """Qwen2-VL uses (16, 24, 24) half-dim sections for d_head=128; scale
+    proportionally for other head dims."""
+    half = d_head // 2
+    a = half // 4
+    b = (half - a) // 2
+    return (a, b, half - a - b)
+
+
+# --------------------------------------------------------------------------
+# SwiGLU MLP
+# --------------------------------------------------------------------------
+def init_mlp(rng, cfg: ArchConfig, d_ff: Optional[int] = None) -> dict:
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    dt = _dtype(cfg)
+    return {
+        "w_gate": dense_init(ks[0], (D, F), dt),
+        "w_up": dense_init(ks[1], (D, F), dt),
+        "w_down": dense_init(ks[2], (F, D), dt),
+    }
+
+
+def mlp(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    g = jax.nn.silu((x @ params["w_gate"]).astype(jnp.float32)).astype(x.dtype)
+    return (g * (x @ params["w_up"])) @ params["w_down"]

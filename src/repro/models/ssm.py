@@ -1,0 +1,230 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block in JAX.
+
+Implements the chunked SSD algorithm: within a chunk the recurrence is
+computed in its quadratic "attention" dual form (MXU-friendly), and a
+cross-chunk associative state pass stitches chunks together — O(L) total
+with matmul-dominated inner loops, exactly the trade the paper's hardware
+analysis motivates.  A recurrent single-step path serves decode (O(1) per
+token with state cache), used by the decode_32k / long_500k cells.
+
+Block structure (mamba2, conv + gate):
+  in_proj -> [z | x | B | C | dt]; short causal depthwise conv on (x, B, C);
+  SSD over heads (scalar-identity A per head); y = y * silu(z); RMSNorm;
+  out_proj.  n_groups = 1 (B/C shared across heads).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import _dtype, dense_init, rmsnorm
+
+CONV_K = 4  # mamba2 depthwise conv width
+
+
+def init_ssm_block(rng, cfg: ArchConfig) -> dict:
+    D, Di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(rng, 4)
+    dt = _dtype(cfg)
+    proj_out = 2 * Di + 2 * N + H
+    return {
+        "in_proj": dense_init(ks[0], (D, proj_out), dt),
+        "out_proj": dense_init(ks[1], (Di, D), dt),
+        "conv_w": dense_init(ks[2], (CONV_K, Di + 2 * N), dt, scale=0.5),
+        "A_log": jnp.zeros((H,), jnp.float32),  # A = -exp(A_log) = -1 init
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.ones((Di,), dt),
+    }
+
+
+def _split_proj(p, cfg: ArchConfig):
+    Di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z, x, B, C, dt = jnp.split(p, [Di, 2 * Di, 2 * Di + N, 2 * Di + 2 * N], axis=-1)
+    return z, x, B, C, dt
+
+
+def _causal_conv(u: jnp.ndarray, w: jnp.ndarray, state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv, width CONV_K.  u: [B, L, C]; w: [K, C].
+
+    With a ``state`` [B, K-1, C] (decode), prepends it; else zero-pads.
+    Returns (out [B, L, C], new_state [B, K-1, C]).
+    """
+    Bsz, L, C = u.shape
+    if state is None:
+        state = jnp.zeros((Bsz, CONV_K - 1, C), u.dtype)
+    full = jnp.concatenate([state, u], axis=1)  # [B, K-1+L, C]
+    out = jnp.zeros((Bsz, L, C), jnp.float32)
+    for k in range(CONV_K):
+        out = out + full[:, k : k + L, :].astype(jnp.float32) * w[k][None, None, :]
+    new_state = full[:, L:, :]
+    return jax.nn.silu(out).astype(u.dtype), new_state
+
+
+def ssd_chunked(
+    x: jnp.ndarray,  # [B, L, H, dh] (dt-unweighted input)
+    dt: jnp.ndarray,  # [B, L, H] positive step sizes
+    A: jnp.ndarray,  # [H] negative decay rates
+    Bm: jnp.ndarray,  # [B, L, N]
+    Cm: jnp.ndarray,  # [B, L, N]
+    chunk: int,
+    initial_state: Optional[jnp.ndarray] = None,  # [B, H, N, dh]
+    unroll: bool = False,
+    compute_dtype=jnp.float32,
+):
+    """Chunked SSD scan.  Returns (y [B, L, H, dh], final_state).
+
+    ``compute_dtype=bfloat16`` runs the quadratic dual form (the O(L*q)
+    intra-chunk tensors — the block's dominant HBM traffic) in bf16 with
+    fp32 accumulation; the inter-chunk state recurrence stays fp32 (long-
+    horizon decay products are precision-critical).  §Perf mamba2 iter2.
+    """
+    Bsz, L, H, dh = x.shape
+    N = Bm.shape[-1]
+    nc = -(-L // chunk)
+    pad = nc * chunk - L
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+
+    xw = (x * dt[..., None]).astype(jnp.float32)  # dt-weighted input
+    dA = dt * A[None, None, :]  # [B, L', H] log-decay (negative)
+    q = chunk
+    xw = xw.reshape(Bsz, nc, q, H, dh)
+    dA = dA.reshape(Bsz, nc, q, H)
+    Bc = Bm.reshape(Bsz, nc, q, N).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, nc, q, N).astype(jnp.float32)
+
+    dA_cs = jnp.cumsum(dA, axis=2)  # [B, nc, q, H]
+
+    # --- intra-chunk (quadratic dual form) ---
+    # L_mask[b,c,i,j,h] = exp(dA_cs_i - dA_cs_j) for j <= i else 0
+    cd = compute_dtype
+    diff = dA_cs[:, :, :, None, :] - dA_cs[:, :, None, :, :]  # [B,nc,q,q,H]
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    Lmask = jnp.where(
+        causal[None, None, :, :, None], jnp.exp(diff), 0.0
+    ).astype(cd)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc.astype(cd), Bc.astype(cd),
+                        preferred_element_type=cd)  # [B,nc,q,q]
+    y_intra = jnp.einsum(
+        "bcij,bcijh,bcjhd->bcihd", scores, Lmask, xw.astype(cd),
+        preferred_element_type=jnp.float32,
+    )
+
+    # --- chunk boundary states ---
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # [B,nc,q,H]
+    S_contrib = jnp.einsum("bcqn,bcqh,bcqhd->bchnd", Bc, decay_to_end, xw)
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])  # [B,nc,H]
+
+    def scan_fn(S, inp):
+        contrib, cd = inp  # [B,H,N,dh], [B,H]
+        S_out = S  # state BEFORE this chunk
+        S = S * cd[:, :, None, None] + contrib
+        return S, S_out
+
+    S0 = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((Bsz, H, N, dh), jnp.float32)
+    )
+    S_final, S_prev = jax.lax.scan(
+        scan_fn,
+        S0,
+        (S_contrib.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+        unroll=unroll,
+    )
+    S_prev = S_prev.transpose(1, 0, 2, 3, 4)  # [B,nc,H,N,dh]
+
+    # --- inter-chunk contribution ---
+    y_inter = jnp.einsum(
+        "bcqn,bchnd,bcqh->bcqhd", Cc, S_prev, jnp.exp(dA_cs)
+    )
+    y = (y_intra + y_inter).reshape(Bsz, nc * q, H, dh)[:, :L]
+    return y, S_final
+
+
+def ssd_sequential(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    A: jnp.ndarray,
+    Bm: jnp.ndarray,
+    Cm: jnp.ndarray,
+    initial_state: Optional[jnp.ndarray] = None,
+):
+    """Step-by-step SSD recurrence oracle (tests validate ssd_chunked):
+
+      S_t = exp(dt_t * A) * S_{t-1} + dt_t * (B_t (x) x_t);   y_t = C_t . S_t
+    """
+    Bsz, L, H, dh = x.shape
+    N = Bm.shape[-1]
+    S0 = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((Bsz, H, N, dh), jnp.float32)
+    )
+
+    def step(S, inp):
+        xt, dtt, bt, ct = inp  # [B,H,dh], [B,H], [B,N], [B,N]
+        decay = jnp.exp(dtt * A[None, :])  # [B,H]
+        S = S * decay[:, :, None, None] + jnp.einsum(
+            "bn,bh,bhd->bhnd", bt, dtt, xt.astype(jnp.float32)
+        )
+        y = jnp.einsum("bn,bhnd->bhd", ct, S)
+        return S, y
+
+    xs = (
+        x.transpose(1, 0, 2, 3),
+        dt.transpose(1, 0, 2),
+        Bm.astype(jnp.float32).transpose(1, 0, 2),
+        Cm.astype(jnp.float32).transpose(1, 0, 2),
+    )
+    S_final, ys = jax.lax.scan(step, S0, xs)
+    return ys.transpose(1, 0, 2, 3), S_final
+
+
+def ssm_block_apply(
+    params: dict,
+    h: jnp.ndarray,  # [B, L, D]
+    cfg: ArchConfig,
+    cache: Optional[dict] = None,
+) -> tuple[jnp.ndarray, Optional[dict]]:
+    """One mamba2 block (pre-norm residual handled by caller).
+
+    cache (decode): {'conv': [B, K-1, Di+2N], 'S': [B, H, N, dh]}.
+    """
+    Di, N, H, dh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    Bsz, L, D = h.shape
+    proj = h @ params["in_proj"]
+    z, x, Bm, Cm, dt = _split_proj(proj, cfg)
+
+    conv_in = jnp.concatenate([x, Bm, Cm], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, params["conv_w"], conv_state)
+    x, Bm, Cm = jnp.split(conv_out, [Di, Di + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    xh = x.reshape(Bsz, L, H, dh)
+
+    cd = _dtype(cfg)  # bf16 models run the dual form in bf16 (see ssd_chunked)
+    if cache is None:
+        y, _ = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk,
+                           unroll=cfg.unroll_scans, compute_dtype=cd)
+        new_cache = None
+    else:
+        # O(1) recurrent steps (decode): fold L steps sequentially
+        y, S = ssd_chunked(xh, dt, A, Bm, Cm, chunk=max(L, 1),
+                           initial_state=cache["S"], compute_dtype=cd)
+        new_cache = {"conv": new_conv, "S": S}
+
+    y = y + params["D_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bsz, L, Di).astype(h.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype)
+    y = rmsnorm(y, params["norm"])
+    return y @ params["out_proj"], new_cache

@@ -1,0 +1,556 @@
+"""Model assembly for all assigned architecture families.
+
+One functional model with family dispatch:
+  dense / vlm : pre-norm GQA transformer (RoPE or M-RoPE), SwiGLU MLP
+  moe         : same, MLP replaced by expert-parallel MoE
+  ssm         : stack of mamba2 blocks (attention-free)
+  hybrid      : mamba2 backbone + ONE shared attention block applied every
+                ``attn_every`` layers with per-application LoRA (zamba2)
+  audio       : whisper-style encoder-decoder (stub frame embeddings)
+
+Layers are stacked with ``jax.lax.scan`` over per-layer param pytrees (small
+HLO, fast 61-layer compiles); ``cfg.remat`` wraps the block in
+``jax.checkpoint``.  Entry points: ``init_params``, ``forward`` (logits),
+``loss_fn``, ``prefill``/``decode_step`` (serving with KV/state caches).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.config import ArchConfig
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def _init_block(rng, cfg: ArchConfig) -> dict:
+    """One decoder block's params (family-dependent)."""
+    if cfg.family == "ssm":
+        k1, k2 = jax.random.split(rng)
+        return {
+            "norm1": jnp.ones((cfg.d_model,), L._dtype(cfg)),
+            "ssm": ssm_lib.init_ssm_block(k1, cfg),
+        }
+    if cfg.family == "hybrid":
+        k1, = jax.random.split(rng, 1)
+        return {
+            "norm1": jnp.ones((cfg.d_model,), L._dtype(cfg)),
+            "ssm": ssm_lib.init_ssm_block(k1, cfg),
+        }
+    k1, k2 = jax.random.split(rng)
+    blk = {
+        "norm1": jnp.ones((cfg.d_model,), L._dtype(cfg)),
+        "norm2": jnp.ones((cfg.d_model,), L._dtype(cfg)),
+        "attn": L.init_attention(k1, cfg),
+    }
+    if cfg.family == "moe":
+        blk["moe"] = moe_lib.init_moe(k2, cfg)
+    else:
+        blk["mlp"] = L.init_mlp(k2, cfg)
+    return blk
+
+
+def _init_shared_attn(rng, cfg: ArchConfig) -> dict:
+    """Zamba2 shared attention+MLP block + per-application LoRA stacks."""
+    k1, k2, k3 = jax.random.split(rng, 3)
+    n_apps = _n_attn_apps(cfg)
+    r = max(cfg.shared_attn_lora_rank, 1)
+    dt = L._dtype(cfg)
+    Hq = cfg.n_heads * cfg.d_head
+    lora = {
+        "a_q": jax.random.normal(k3, (n_apps, cfg.d_model, r), dt) * 0.02,
+        "b_q": jnp.zeros((n_apps, r, Hq), dt),
+    }
+    return {
+        "norm1": jnp.ones((cfg.d_model,), dt),
+        "norm2": jnp.ones((cfg.d_model,), dt),
+        "attn": L.init_attention(k1, cfg),
+        "mlp": L.init_mlp(k2, cfg),
+        "lora": lora,
+    }
+
+
+def _n_attn_apps(cfg: ArchConfig) -> int:
+    return cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
+
+
+def init_params(rng, cfg: ArchConfig) -> dict:
+    keys = jax.random.split(rng, 8)
+    dt = L._dtype(cfg)
+    V, D = cfg.vocab_padded, cfg.d_model
+    params = {
+        "embed": (jax.random.normal(keys[0], (V, D)) * 0.02).astype(dt),
+        "lm_head": L.dense_init(keys[1], (D, V), dt),
+        "final_norm": jnp.ones((D,), dt),
+    }
+    n_layers = cfg.n_layers
+    layer_keys = jax.random.split(keys[2], n_layers)
+    params["blocks"] = jax.vmap(lambda k: _init_block(k, cfg))(layer_keys)
+    if cfg.family == "hybrid":
+        params["shared_attn"] = _init_shared_attn(keys[3], cfg)
+    if cfg.family == "audio":
+        enc_keys = jax.random.split(keys[4], cfg.enc_layers)
+        enc_cfg = cfg  # same dims for encoder
+        params["enc_blocks"] = jax.vmap(
+            lambda k: {
+                "norm1": jnp.ones((D,), dt),
+                "norm2": jnp.ones((D,), dt),
+                "attn": L.init_attention(jax.random.fold_in(k, 0), enc_cfg),
+                "mlp": L.init_mlp(jax.random.fold_in(k, 1), enc_cfg),
+            }
+        )(enc_keys)
+        params["enc_norm"] = jnp.ones((D,), dt)
+        dec_keys = jax.random.split(keys[5], n_layers)
+        params["cross_blocks"] = jax.vmap(
+            lambda k: {
+                "norm": jnp.ones((D,), dt),
+                "attn": L.init_attention(k, cfg),
+            }
+        )(dec_keys)
+    return params
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+def _dense_block(blk, h, cfg, positions, causal=True, cross_kv=None, kv_cache=None):
+    a, new_cache = L.attention(
+        blk["attn"], L.rmsnorm(h, blk["norm1"]), cfg, positions,
+        causal=causal, kv_cache=kv_cache,
+    )
+    h = h + a
+    if cross_kv is not None:
+        c, _ = L.attention(
+            cross_kv["params"]["attn"],
+            L.rmsnorm(h, cross_kv["params"]["norm"]),
+            cfg, positions, causal=False, cross_kv=(cross_kv["k"], cross_kv["v"]),
+        )
+        h = h + c
+    if cfg.family == "moe":
+        h = h + moe_lib.moe_apply(
+            L.rmsnorm(h, blk["norm2"]), blk["moe"], cfg, mesh=_MESH[0]
+        )
+    else:
+        h = h + L.mlp(blk["mlp"], L.rmsnorm(h, blk["norm2"]))
+    return h, new_cache
+
+
+# Mesh handle for the MoE shard_map path; set by the launcher / dryrun via
+# ``set_mesh`` (None -> single-shard local compute, used by CPU smokes).
+_MESH: list = [None]
+
+
+def set_mesh(mesh) -> None:
+    _MESH[0] = mesh
+
+
+def _constrain_tokens(h: jnp.ndarray) -> jnp.ndarray:
+    """Pin activation sharding: batch over (pod, data), d_model replicated.
+
+    Without this, GSPMD propagates the embedding table's (model, data)
+    layout through the gather and leaves the BATCH dim replicated — every
+    device then does dp-times redundant work (measured 16x on the 16x16
+    mesh; see EXPERIMENTS.md §Perf iteration 1).  No-op without a mesh.
+    """
+    mesh = _MESH[0]
+    if mesh is None:
+        return h
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    batch = h.shape[0]
+    prod = 1
+    axes = None
+    for i, a in enumerate(dp):
+        prod *= mesh.shape[a]
+        if batch % prod == 0:
+            axes = dp[: i + 1]
+    spec = P(axes, *(None,) * (h.ndim - 1))
+    return jax.lax.with_sharding_constraint(h, NamedSharding(mesh, spec))
+
+
+def _scan_blocks(params, h, cfg, positions, body):
+    """Scan ``body`` over stacked per-layer params."""
+    def f(carry, blk):
+        out = _constrain_tokens(body(blk, carry))
+        return out, None
+
+    if cfg.remat == "full":
+        f = jax.checkpoint(f, prevent_cse=False)
+    h, _ = jax.lax.scan(f, h, params["blocks"], unroll=cfg.unroll_scans)
+    return h
+
+
+def _hybrid_forward(params, h, cfg, positions):
+    """Zamba2: scan mamba blocks; every ``attn_every`` layers apply the
+    shared attention block with that application's LoRA delta on W_q."""
+    n_apps = _n_attn_apps(cfg)
+    per = cfg.attn_every
+    blocks = params["blocks"]
+    shared = params["shared_attn"]
+
+    def ssm_body(blk, hh):
+        y, _ = ssm_lib.ssm_block_apply(blk["ssm"], L.rmsnorm(hh, blk["norm1"]), cfg)
+        return _constrain_tokens(hh + y)
+
+    def superblock(carry, inp):
+        hh = carry
+        blk_group, app_idx = inp  # stacked group of ``per`` ssm blocks
+
+        def inner(c, blk):
+            return ssm_body(blk, c), None
+
+        hh, _ = jax.lax.scan(inner, hh, blk_group, unroll=cfg.unroll_scans)
+        # shared attention with per-application LoRA on W_q
+        lora_a = shared["lora"]["a_q"][app_idx]
+        lora_b = shared["lora"]["b_q"][app_idx]
+        attn_p = dict(shared["attn"])
+        attn_p["wq"] = attn_p["wq"] + lora_a @ lora_b
+        a, _ = L.attention(attn_p, L.rmsnorm(hh, shared["norm1"]), cfg, positions)
+        hh = hh + a
+        hh = hh + L.mlp(shared["mlp"], L.rmsnorm(hh, shared["norm2"]))
+        return _constrain_tokens(hh), None
+
+    n_super = n_apps * per
+    grouped = jax.tree.map(
+        lambda x: x[:n_super].reshape((n_apps, per) + x.shape[1:]), blocks
+    )
+    fn = superblock
+    if cfg.remat == "full":
+        fn = jax.checkpoint(fn, prevent_cse=False)
+    h, _ = jax.lax.scan(fn, h, (grouped, jnp.arange(n_apps)), unroll=cfg.unroll_scans)
+    # trailing ssm blocks (n_layers % attn_every)
+    tail = jax.tree.map(lambda x: x[n_super:], blocks)
+    if cfg.n_layers - n_super > 0:
+        def inner2(c, blk):
+            return ssm_body(blk, c), None
+        h, _ = jax.lax.scan(inner2, h, tail, unroll=cfg.unroll_scans)
+    return h
+
+
+def _encode_audio(params, frames, cfg):
+    """Whisper encoder over stub frame embeddings [B, T_enc, D]."""
+    pos = jnp.broadcast_to(jnp.arange(frames.shape[1]), frames.shape[:2])
+    def body(blk, hh):
+        a, _ = L.attention(
+            blk["attn"], L.rmsnorm(hh, blk["norm1"]), cfg, pos, causal=False
+        )
+        hh = hh + a
+        return _constrain_tokens(hh + L.mlp(blk["mlp"], L.rmsnorm(hh, blk["norm2"])))
+
+    def f(carry, blk):
+        return body(blk, carry), None
+    if cfg.remat == "full":
+        f = jax.checkpoint(f, prevent_cse=False)
+    h, _ = jax.lax.scan(f, frames, params["enc_blocks"], unroll=cfg.unroll_scans)
+    return L.rmsnorm(h, params["enc_norm"])
+
+
+def forward(
+    params: dict,
+    tokens: jnp.ndarray,
+    cfg: ArchConfig,
+    positions: Optional[jnp.ndarray] = None,
+    frames: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Token logits [B, S, V] (training / prefill path, no caches)."""
+    B, S = tokens.shape
+    h = _constrain_tokens(params["embed"][tokens])  # gather
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        if cfg.mrope:
+            positions = jnp.broadcast_to(positions, (3, B, S))
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(blk, hh):
+            out, _ = _dense_block(blk, hh, cfg, positions)
+            return out
+        h = _scan_blocks(params, h, cfg, positions, body)
+    elif cfg.family == "ssm":
+        def body(blk, hh):
+            y, _ = ssm_lib.ssm_block_apply(blk["ssm"], L.rmsnorm(hh, blk["norm1"]), cfg)
+            return hh + y
+        h = _scan_blocks(params, h, cfg, positions, body)
+    elif cfg.family == "hybrid":
+        h = _hybrid_forward(params, h, cfg, positions)
+    elif cfg.family == "audio":
+        if frames is None:
+            raise ValueError("audio family needs `frames` (stub embeddings)")
+        enc = _encode_audio(params, frames, cfg)
+
+        def body(carry, blks):
+            hh = carry
+            blk, xblk = blks
+            # precompute cross K/V from encoder output for this layer
+            kx = (enc @ xblk["attn"]["wk"]).reshape(
+                B, enc.shape[1], cfg.n_kv_heads, cfg.d_head
+            )
+            vx = (enc @ xblk["attn"]["wv"]).reshape(
+                B, enc.shape[1], cfg.n_kv_heads, cfg.d_head
+            )
+            cross = {"params": {"attn": xblk["attn"], "norm": xblk["norm"]},
+                     "k": kx, "v": vx}
+            out, _ = _dense_block(blk, hh, cfg, positions, cross_kv=cross)
+            return _constrain_tokens(out), None
+
+        f = body
+        if cfg.remat == "full":
+            f = jax.checkpoint(f, prevent_cse=False)
+        h, _ = jax.lax.scan(
+            f, h, (params["blocks"], params["cross_blocks"]),
+            unroll=cfg.unroll_scans,
+        )
+    else:
+        raise ValueError(f"unknown family {cfg.family!r}")
+
+    h = L.rmsnorm(h, params["final_norm"])
+    return h @ params["lm_head"]
+
+
+def loss_fn(
+    params: dict, batch: dict, cfg: ArchConfig
+) -> tuple[jnp.ndarray, dict]:
+    """Next-token cross-entropy (fp32 softmax) + z-loss, mean over tokens."""
+    logits = forward(
+        params, batch["tokens"], cfg,
+        positions=batch.get("positions"), frames=batch.get("frames"),
+    ).astype(jnp.float32)
+    if cfg.vocab_padded != cfg.vocab_size:
+        # mask padded vocab columns out of the softmax
+        pad = jnp.arange(cfg.vocab_padded) >= cfg.vocab_size
+        logits = logits - pad.astype(jnp.float32) * 1e9
+    labels = batch["labels"]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    # label log-prob via a masked reduction instead of take_along_axis: the
+    # vocab dim is model-sharded and a gather would force an all-gather of
+    # the fp32 logits; the iota-compare reduces locally and psums a scalar.
+    v_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    ll = jnp.sum(
+        jnp.where(v_iota == labels[..., None], logits, 0.0), axis=-1
+    )
+    nll = (logz - ll).mean()
+    zloss = 1e-4 * (logz**2).mean()
+    return nll + zloss, {"nll": nll, "zloss": zloss}
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, enc_len: int = 0) -> dict:
+    """Decode caches: per-layer KV for attention families, (conv, S) state
+    for SSM/hybrid; cross-KV for audio."""
+    dt = L._dtype(cfg)
+    dh, Hkv, Lr = cfg.d_head or 0, cfg.n_kv_heads or 0, cfg.n_layers
+    if cfg.family in ("dense", "vlm", "moe"):
+        return {
+            "k": jnp.zeros((Lr, batch, max_len, Hkv, dh), dt),
+            "v": jnp.zeros((Lr, batch, max_len, Hkv, dh), dt),
+            "len": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family == "ssm":
+        return {
+            "conv": jnp.zeros((Lr, batch, ssm_lib.CONV_K - 1, cfg.d_inner + 2 * cfg.ssm_state), dt),
+            "S": jnp.zeros((Lr, batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+            "len": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family == "hybrid":
+        n_apps = _n_attn_apps(cfg)
+        return {
+            "conv": jnp.zeros((Lr, batch, ssm_lib.CONV_K - 1, cfg.d_inner + 2 * cfg.ssm_state), dt),
+            "S": jnp.zeros((Lr, batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+            "k": jnp.zeros((n_apps, batch, max_len, Hkv, dh), dt),
+            "v": jnp.zeros((n_apps, batch, max_len, Hkv, dh), dt),
+            "len": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family == "audio":
+        return {
+            "k": jnp.zeros((Lr, batch, max_len, Hkv, dh), dt),
+            "v": jnp.zeros((Lr, batch, max_len, Hkv, dh), dt),
+            "xk": jnp.zeros((Lr, batch, enc_len, Hkv, dh), dt),
+            "xv": jnp.zeros((Lr, batch, enc_len, Hkv, dh), dt),
+            "len": jnp.zeros((), jnp.int32),
+        }
+    raise ValueError(cfg.family)
+
+
+def decode_step(
+    params: dict, cache: dict, tokens: jnp.ndarray, cfg: ArchConfig
+) -> tuple[dict, jnp.ndarray]:
+    """One decode step: tokens [B, 1] -> (updated cache, logits [B, 1, V]).
+
+    Layer caches are stacked on axis 0 and the block scan threads per-layer
+    slices through, so decode is a single fused scan like training.
+    """
+    B, S = tokens.shape
+    h = _constrain_tokens(params["embed"][tokens])
+    pos = jnp.broadcast_to(cache["len"] + jnp.arange(S), (B, S))
+    if cfg.mrope:
+        pos = jnp.broadcast_to(pos, (3, B, S))
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(hh, inp):
+            blk, kc, vc = inp
+            out, nc = _dense_block(
+                blk, hh, cfg, pos,
+                kv_cache={"k": kc, "v": vc, "len": cache["len"]},
+            )
+            return out, (nc["k"], nc["v"])
+
+        h, (ks, vs) = jax.lax.scan(body, h, (params["blocks"], cache["k"], cache["v"]), unroll=cfg.unroll_scans)
+        new_cache = {"k": ks, "v": vs, "len": cache["len"] + S}
+    elif cfg.family == "ssm":
+        def body(hh, inp):
+            blk, conv, S_ = inp
+            y, nc = ssm_lib.ssm_block_apply(
+                blk["ssm"], L.rmsnorm(hh, blk["norm1"]), cfg,
+                cache={"conv": conv, "S": S_},
+            )
+            return hh + y, (nc["conv"], nc["S"])
+
+        h, (convs, Ss) = jax.lax.scan(body, h, (params["blocks"], cache["conv"], cache["S"]), unroll=cfg.unroll_scans)
+        new_cache = {"conv": convs, "S": Ss, "len": cache["len"] + S}
+    elif cfg.family == "hybrid":
+        h, new_cache = _hybrid_decode(params, cache, h, pos, cfg)
+    elif cfg.family == "audio":
+        def body(hh, inp):
+            blk, xblk, kc, vc, xk, xv = inp
+            cross = {"params": {"attn": xblk["attn"], "norm": xblk["norm"]},
+                     "k": xk, "v": xv}
+            out, nc = _dense_block(
+                blk, hh, cfg, pos, cross_kv=cross,
+                kv_cache={"k": kc, "v": vc, "len": cache["len"]},
+            )
+            return out, (nc["k"], nc["v"])
+
+        h, (ks, vs) = jax.lax.scan(
+            body, h,
+            (params["blocks"], params["cross_blocks"], cache["k"], cache["v"],
+             cache["xk"], cache["xv"]),
+            unroll=cfg.unroll_scans,
+        )
+        new_cache = dict(cache)
+        new_cache.update({"k": ks, "v": vs, "len": cache["len"] + S})
+    else:
+        raise ValueError(cfg.family)
+
+    h = L.rmsnorm(h, params["final_norm"])
+    return new_cache, h @ params["lm_head"]
+
+
+def _hybrid_decode(params, cache, h, pos, cfg):
+    per = cfg.attn_every
+    n_apps = _n_attn_apps(cfg)
+    n_super = n_apps * per
+    blocks = params["blocks"]
+    shared = params["shared_attn"]
+    grouped = jax.tree.map(
+        lambda x: x[:n_super].reshape((n_apps, per) + x.shape[1:]), blocks
+    )
+    conv_g = cache["conv"][:n_super].reshape((n_apps, per) + cache["conv"].shape[1:])
+    S_g = cache["S"][:n_super].reshape((n_apps, per) + cache["S"].shape[1:])
+
+    def superblock(hh, inp):
+        blk_group, conv_grp, S_grp, kc, vc, app_idx = inp
+
+        def inner(c, blk_state):
+            blk, conv, S_ = blk_state
+            y, nc = ssm_lib.ssm_block_apply(
+                blk["ssm"], L.rmsnorm(c, blk["norm1"]), cfg,
+                cache={"conv": conv, "S": S_},
+            )
+            return c + y, (nc["conv"], nc["S"])
+
+        hh, (convs, Ss) = jax.lax.scan(inner, hh, (blk_group, conv_grp, S_grp), unroll=cfg.unroll_scans)
+        lora_a = shared["lora"]["a_q"][app_idx]
+        lora_b = shared["lora"]["b_q"][app_idx]
+        attn_p = dict(shared["attn"])
+        attn_p["wq"] = attn_p["wq"] + lora_a @ lora_b
+        a, nc = L.attention(
+            attn_p, L.rmsnorm(hh, shared["norm1"]), cfg, pos,
+            kv_cache={"k": kc, "v": vc, "len": cache["len"]},
+        )
+        hh = hh + a
+        hh = hh + L.mlp(shared["mlp"], L.rmsnorm(hh, shared["norm2"]))
+        return hh, (convs, Ss, nc["k"], nc["v"])
+
+    h, (convs, Ss, ks, vs) = jax.lax.scan(
+        superblock, h,
+        (grouped, conv_g, S_g, cache["k"], cache["v"], jnp.arange(n_apps)),
+        unroll=cfg.unroll_scans,
+    )
+    new_conv = convs.reshape((n_super,) + convs.shape[2:])
+    new_S = Ss.reshape((n_super,) + Ss.shape[2:])
+    # trailing blocks
+    tail_n = cfg.n_layers - n_super
+    if tail_n > 0:
+        tail = jax.tree.map(lambda x: x[n_super:], blocks)
+
+        def inner2(c, blk_state):
+            blk, conv, S_ = blk_state
+            y, nc = ssm_lib.ssm_block_apply(
+                blk["ssm"], L.rmsnorm(c, blk["norm1"]), cfg,
+                cache={"conv": conv, "S": S_},
+            )
+            return c + y, (nc["conv"], nc["S"])
+
+        h, (tc, tS) = jax.lax.scan(
+            inner2, h, (tail, cache["conv"][n_super:], cache["S"][n_super:]),
+            unroll=cfg.unroll_scans,
+        )
+        new_conv = jnp.concatenate([new_conv, tc], axis=0)
+        new_S = jnp.concatenate([new_S, tS], axis=0)
+    new_cache = {
+        "conv": new_conv, "S": new_S, "k": ks, "v": vs,
+        "len": cache["len"] + h.shape[1],
+    }
+    return h, new_cache
+
+
+def prefill(
+    params: dict,
+    tokens: jnp.ndarray,
+    cfg: ArchConfig,
+    max_len: int,
+    frames: Optional[jnp.ndarray] = None,
+) -> tuple[dict, jnp.ndarray]:
+    """Prefill a prompt and build decode caches.
+
+    Implemented as forward + cache construction; attention families re-derive
+    K/V per layer through the decode path of the scan (cheap relative to the
+    forward), SSM families capture final states.
+    """
+    B, S = tokens.shape
+    cache = init_cache(cfg, B, max_len, enc_len=frames.shape[1] if frames is not None else 0)
+    if cfg.family == "audio":
+        enc = _encode_audio(params, frames, cfg)
+        def xkv(xblk):
+            kx = (enc @ xblk["attn"]["wk"]).reshape(B, enc.shape[1], cfg.n_kv_heads, cfg.d_head)
+            vx = (enc @ xblk["attn"]["wv"]).reshape(B, enc.shape[1], cfg.n_kv_heads, cfg.d_head)
+            return kx, vx
+        xks, xvs = jax.vmap(xkv)(params["cross_blocks"])
+        cache["xk"], cache["xv"] = xks, xvs
+    # run the decode path over the whole prompt at once (S-token "step")
+    cache, logits = decode_step(params, cache, tokens, cfg)
+    return cache, logits
+
+
+def train_step_fn(cfg: ArchConfig, optimizer):
+    """Returns a jit-able (params, opt_state, batch) -> (params, opt_state,
+    metrics) closure for this arch + optimizer (see distributed/optimizer)."""
+
+    def step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg), has_aux=True
+        )(params)
+        params, opt_state = optimizer.update(params, grads, opt_state)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return step

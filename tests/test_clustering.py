@@ -1,0 +1,83 @@
+"""Clustering substrate: rand index, k-means, DTCR baseline, UCR data."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.clustering.dtcr import DTCRConfig, fit_predict
+from repro.clustering.kmeans import kmeans
+from repro.clustering.metrics import normalized_rand, rand_index
+from repro.data import ucr
+
+
+def test_rand_index_identical_labelings():
+    y = np.array([0, 0, 1, 1, 2])
+    assert rand_index(y, y) == 1.0
+    assert rand_index(y, y[::-1] * 0 + np.array([2, 2, 0, 0, 1])) == 1.0  # relabel
+
+
+def test_rand_index_known_value():
+    # classic example: RI between these two partitions of 6 points
+    a = np.array([0, 0, 0, 1, 1, 1])
+    b = np.array([0, 0, 1, 1, 2, 2])
+    # pairs agreeing: compute by brute force
+    n = len(a)
+    agree = sum(
+        (a[i] == a[j]) == (b[i] == b[j])
+        for i in range(n) for j in range(i + 1, n)
+    )
+    assert abs(rand_index(a, b) - agree / (n * (n - 1) / 2)) < 1e-12
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(4, 40),
+    k=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rand_index_bounds_and_symmetry(n, k, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, k, n)
+    b = rng.integers(0, k, n)
+    ri = rand_index(a, b)
+    assert 0.0 <= ri <= 1.0
+    assert abs(ri - rand_index(b, a)) < 1e-12
+
+
+def test_kmeans_recovers_separated_clusters():
+    rng = np.random.default_rng(0)
+    x = np.concatenate([
+        rng.normal(0, 0.2, (40, 4)), rng.normal(5, 0.2, (40, 4))
+    ])
+    y = np.array([0] * 40 + [1] * 40)
+    _, labels = kmeans(x, 2, seed=0)
+    assert rand_index(y, labels) > 0.95
+
+
+def test_dtcr_runs_and_beats_chance_on_easy_data():
+    rng = np.random.default_rng(1)
+    t = np.linspace(0, 1, 32)
+    xs = [np.sin(2 * np.pi * 3 * t) + rng.normal(0, 0.2, 32) for _ in range(20)]
+    xs += [np.sign(np.sin(2 * np.pi * 1 * t)) + rng.normal(0, 0.2, 32) for _ in range(20)]
+    x = np.stack(xs)
+    y = np.array([0] * 20 + [1] * 20)
+    labels = fit_predict(x, DTCRConfig(n_clusters=2, steps=40, hidden=16))
+    assert rand_index(y, labels) > 0.55
+
+
+def test_ucr_synthetic_doubles_match_table_geometry():
+    for name, meta in ucr.BENCHMARKS.items():
+        ds = ucr.make_synthetic(name)
+        assert ds.x.shape[1] == meta["length"], name
+        assert ds.n_classes == meta["classes"], name
+        p, q = ucr.PAPER_COLUMNS[name]
+        assert p == meta["length"] and q == meta["classes"], name
+
+
+def test_ucr_synthetic_deterministic():
+    a = ucr.make_synthetic("Beef", seed=3)
+    b = ucr.make_synthetic("Beef", seed=3)
+    np.testing.assert_array_equal(a.x, b.x)
+
+
+def test_normalized_rand():
+    assert normalized_rand(0.6, 0.8) == pytest.approx(0.75)

@@ -1,0 +1,250 @@
+"""Distributed runtime: checkpoint/restart, determinism, elastic resume,
+straggler monitor, gradient compression, sharding rules."""
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.data.tokens import DataConfig, TokenSource
+from repro.distributed.checkpoint import Checkpointer
+from repro.distributed.optimizer import (
+    Adafactor, AdamW, ErrorFeedbackInt8, Schedule, make_optimizer,
+)
+from repro.distributed.straggler import RebalancePolicy, StepMonitor
+from repro.distributed.train_loop import TrainConfig, Trainer
+
+
+# ------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip_and_latest():
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d)
+        tree = {"a": jnp.arange(6.0).reshape(2, 3), "b": {"c": jnp.ones(4)}}
+        ck.save(3, tree, blocking=True)
+        ck.save(7, jax.tree.map(lambda x: x * 2, tree), blocking=True)
+        assert ck.latest_step() == 7
+        like = jax.tree.map(lambda x: jnp.zeros_like(x), tree)
+        out, step = ck.restore(like)
+        assert step == 7
+        np.testing.assert_allclose(np.asarray(out["a"]), np.arange(6.0).reshape(2, 3) * 2)
+
+
+def test_checkpoint_interrupted_save_invisible():
+    """A .tmp directory (simulated mid-write preemption) must not be
+    restorable; the previous complete step remains LATEST."""
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d)
+        tree = {"a": jnp.ones(3)}
+        ck.save(1, tree, blocking=True)
+        os.makedirs(os.path.join(d, "step_2.tmp"))  # torn write
+        assert ck.latest_step() == 1
+        out, step = ck.restore(jax.tree.map(jnp.zeros_like, tree))
+        assert step == 1
+
+
+def test_checkpoint_structure_mismatch_rejected():
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d)
+        ck.save(1, {"a": jnp.ones(3)}, blocking=True)
+        with pytest.raises(ValueError):
+            ck.restore({"a": jnp.zeros(3), "b": jnp.zeros(2)})
+
+
+# ------------------------------------------------------------- data
+def test_data_restart_determinism_and_elastic_resharding():
+    cfg = DataConfig(vocab_size=100, global_batch=8, seq_len=16, seed=1)
+    src = TokenSource(cfg)
+    a = src.global_batch_at(5)
+    b = src.global_batch_at(5)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+    # re-sharding is a pure re-slice of the same global batch
+    s0 = src.shard_at(5, 0, 4)
+    s1 = src.shard_at(5, 1, 4)
+    full = np.asarray(a["tokens"])
+    np.testing.assert_array_equal(np.asarray(s0["tokens"]), full[:2])
+    np.testing.assert_array_equal(np.asarray(s1["tokens"]), full[2:4])
+    wide = src.shard_at(5, 0, 2)
+    np.testing.assert_array_equal(np.asarray(wide["tokens"]), full[:4])
+
+
+# ------------------------------------------------------------- trainer
+def test_trainer_checkpoint_restart_bitexact():
+    """Run 6 steps straight vs preempt-after-3 + resume (same config, so
+    the LR schedule horizon is identical): losses must match."""
+    arch = get_arch("mamba2-370m", smoke=True)
+    dc = DataConfig(vocab_size=arch.vocab_size, global_batch=4, seq_len=16)
+    with tempfile.TemporaryDirectory() as d1, tempfile.TemporaryDirectory() as d2:
+        tc_a = TrainConfig(steps=6, checkpoint_every=100, checkpoint_dir=d1,
+                           warmup_steps=2)
+        straight = Trainer(arch, dc, tc_a).run()["losses"]
+        tc_b = TrainConfig(steps=6, checkpoint_every=3, checkpoint_dir=d2,
+                           warmup_steps=2)
+        Trainer(arch, dc, tc_b).run(stop_after=3)   # preempted
+        resumed = Trainer(arch, dc, tc_b).run()["losses"]  # restores step 3
+        np.testing.assert_allclose(straight[3:], resumed, rtol=1e-5, atol=1e-6)
+
+
+def test_trainer_microbatch_equivalence():
+    """Gradient accumulation over microbatches ~= single large batch."""
+    arch = get_arch("granite-3-8b", smoke=True)
+    dc = DataConfig(vocab_size=arch.vocab_size, global_batch=8, seq_len=8)
+    l1 = Trainer(arch, dc, TrainConfig(steps=2, microbatches=1, warmup_steps=1)).run()["losses"]
+    l2 = Trainer(arch, dc, TrainConfig(steps=2, microbatches=4, warmup_steps=1)).run()["losses"]
+    np.testing.assert_allclose(l1, l2, rtol=2e-3, atol=2e-3)
+
+
+def test_trainer_elastic_resume_different_mesh():
+    """Checkpoint on 1 'device', resume on a 4-device (2x2) mesh, in a
+    subprocess (device count must be set before jax init)."""
+    code = textwrap.dedent("""
+        import os, tempfile
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, numpy as np
+        from repro.configs import get_arch
+        from repro.data.tokens import DataConfig
+        from repro.distributed.train_loop import TrainConfig, Trainer
+        from repro.distributed.elastic import resume_elastic
+
+        arch = get_arch("granite-3-8b", smoke=True)
+        dc = DataConfig(vocab_size=arch.vocab_size, global_batch=4, seq_len=16)
+        with tempfile.TemporaryDirectory() as d:
+            tc = TrainConfig(steps=2, checkpoint_every=2, checkpoint_dir=d,
+                             warmup_steps=1)
+            Trainer(arch, dc, tc, mesh=None).run()   # "old topology"
+            mesh = jax.make_mesh((2, 2), ("data", "model"))
+            tc2 = TrainConfig(steps=4, checkpoint_every=2, checkpoint_dir=d,
+                              warmup_steps=1)
+            tr = resume_elastic(arch, dc, tc2, mesh)
+            out = tr.run()
+            assert len(out["losses"]) == 2      # steps 2..3
+            assert all(np.isfinite(out["losses"]))
+            print("ELASTIC_OK")
+    """)
+    r = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=dict(os.environ, PYTHONPATH="src"),
+        timeout=600,
+    )
+    assert "ELASTIC_OK" in r.stdout, r.stderr[-3000:]
+
+
+# ------------------------------------------------------------- straggler
+def test_straggler_monitor_flags_outliers():
+    m = StepMonitor(window=20, threshold=2.0, warmup=3)
+    for i in range(10):
+        m.observe(i, 0.1)
+    ev = m.observe(10, 0.5)
+    assert ev is not None and ev.ratio > 2
+    assert not m.should_rebalance(patience=3)
+    m.observe(11, 0.5)
+    m.observe(12, 0.55)
+    assert m.should_rebalance(patience=3)
+
+
+def test_rebalance_policy_conserves_batch():
+    pol = RebalancePolicy(num_shards=4, shave=0.25)
+    w = pol.apply(slow_shard=2)
+    assert abs(sum(w) - 4.0) < 1e-9
+    assert w[2] < 1.0 and all(x > 1.0 for i, x in enumerate(w) if i != 2)
+
+
+# ------------------------------------------------------------- optimizer
+def test_adamw_and_adafactor_reduce_loss_quadratic():
+    """Both optimizers must descend on a quadratic."""
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(8, 8)), jnp.float32)
+
+    def loss(p):
+        return jnp.mean((p["w"] - target) ** 2)
+
+    for opt in (AdamW(Schedule(peak_lr=0.05, warmup_steps=1, total_steps=100),
+                      weight_decay=0.0),
+                Adafactor(Schedule(peak_lr=0.5, warmup_steps=1, total_steps=100))):
+        params = {"w": jnp.zeros((8, 8))}
+        state = opt.init(params)
+        l0 = float(loss(params))
+        for _ in range(40):
+            g = jax.grad(loss)(params)
+            params, state = opt.update(params, g, state)
+        assert float(loss(params)) < 0.5 * l0, type(opt).__name__
+
+
+def test_adafactor_state_is_factored():
+    opt = Adafactor(Schedule())
+    params = {"w": jnp.zeros((16, 32)), "b": jnp.zeros((32,))}
+    st = opt.init(params)
+    assert st["vr"]["w"].shape == (16,)
+    assert st["vc"]["w"].shape == (32,)
+    assert st["m"]["w"].dtype == jnp.bfloat16
+
+
+def test_error_feedback_compression_converges():
+    """EF-int8 compressed descent matches uncompressed within tolerance."""
+    target = jnp.asarray(np.random.default_rng(1).normal(size=(16, 16)), jnp.float32)
+
+    def loss(p):
+        return jnp.mean((p["w"] - target) ** 2)
+
+    def run(compress):
+        opt = make_optimizer(
+            "adamw", Schedule(peak_lr=0.05, warmup_steps=1, total_steps=200),
+            compress=compress,
+        )
+        opt.weight_decay = 0.0
+        params = {"w": jnp.zeros((16, 16))}
+        state = opt.init(params)
+        for _ in range(60):
+            g = jax.grad(loss)(params)
+            params, state = opt.update(params, g, state)
+        return float(loss(params))
+
+    plain, comp = run(False), run(True)
+    assert comp < 2.0 * plain + 1e-3
+
+
+def test_ef_quantization_residual_identity():
+    ef = ErrorFeedbackInt8()
+    g = {"a": jnp.asarray(np.random.default_rng(2).normal(size=(32,)), jnp.float32)}
+    r = ef.init(g)
+    gq, r2 = ef.apply(g, r)
+    np.testing.assert_allclose(
+        np.asarray(gq["a"] + r2["a"]), np.asarray(g["a"]), rtol=1e-6, atol=1e-6
+    )
+
+
+# ------------------------------------------------------------- sharding rules
+def test_sharding_rules_cover_every_param():
+    """Every leaf of every full arch gets a spec with ndim == leaf ndim and
+    only valid axis names."""
+    import repro.configs as C
+    from repro.distributed import sharding
+    from repro.models import transformer as T
+
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 16, "model": 16}
+
+    for arch_id in C.ARCH_IDS:
+        cfg = C.get_arch(arch_id)
+        shapes = jax.eval_shape(lambda: T.init_params(jax.random.key(0), cfg))
+        specs = sharding.param_specs(shapes, FakeMesh())
+        flat_s, _ = jax.tree_util.tree_flatten(specs)
+        flat_p, _ = jax.tree_util.tree_flatten(shapes)
+        assert len(flat_s) == len(flat_p)
+        for sp, leaf in zip(flat_s, flat_p):
+            assert len(sp) <= leaf.ndim, (arch_id, sp, leaf.shape)
+            # sharded dims must divide
+            for dim, names in zip(leaf.shape, tuple(sp) + (None,) * leaf.ndim):
+                if names is None:
+                    continue
+                names = names if isinstance(names, tuple) else (names,)
+                prod = 1
+                for nm in names:
+                    prod *= FakeMesh.shape[nm]
+                assert dim % prod == 0, (arch_id, sp, leaf.shape)

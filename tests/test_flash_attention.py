@@ -1,0 +1,64 @@
+"""Pallas flash-attention kernel vs the pure-jnp online-softmax oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.models.layers import chunked_attention
+
+
+def _oracle(q, k, v, causal):
+    B, S, H, d = q.shape
+    return chunked_attention(
+        q.reshape(B, S, H, 1, d), k, v, causal=causal, kv_chunk=64
+    ).reshape(B, S, H, d)
+
+
+@pytest.mark.parametrize(
+    "B,S,H,d,causal",
+    [
+        (2, 256, 4, 64, True),
+        (1, 128, 2, 32, False),
+        (2, 384, 3, 128, True),
+        (1, 512, 1, 64, True),
+    ],
+)
+def test_flash_matches_oracle(B, S, H, d, causal):
+    rng = np.random.default_rng(B * S + H)
+    q = jnp.asarray(rng.normal(size=(B, S, H, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, d)), jnp.float32)
+    got = np.asarray(flash_attention_pallas(q, k, v, causal=causal))
+    want = np.asarray(_oracle(q, k, v, causal))
+    err = np.abs(got - want).max() / (np.abs(want).max() + 1e-9)
+    assert err < 2e-5, err
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    s_blocks=st.integers(1, 3),
+    h=st.integers(1, 3),
+    d=st.sampled_from([32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_property(s_blocks, h, d, seed):
+    rng = np.random.default_rng(seed)
+    S = 128 * s_blocks
+    q = jnp.asarray(rng.normal(size=(1, S, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, S, h, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, S, h, d)), jnp.float32)
+    got = np.asarray(flash_attention_pallas(q, k, v, causal=True))
+    want = np.asarray(_oracle(q, k, v, True))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_flash_bf16_io():
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(size=(1, 128, 2, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 128, 2, 64)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 128, 2, 64)), jnp.bfloat16)
+    got = np.asarray(flash_attention_pallas(q, k, v), np.float32)
+    want = np.asarray(_oracle(q, k, v, True), np.float32)
+    err = np.abs(got - want).max() / (np.abs(want).max() + 1e-9)
+    assert err < 2e-2  # bf16 I/O tolerance

@@ -1,0 +1,140 @@
+"""Hardware generator: RTL structure, flow model calibration, forecasting."""
+import os
+import re
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.configs.tnn_columns import all_benchmarks, hardware_spec
+from repro.hwgen import flow, pdk, rtl, tcl
+from repro.hwgen.forecast import Forecaster, PaperForecaster
+
+
+SPEC = rtl.ColumnSpec(name="t65x2", p=65, q=2, theta=56, t_max=64)
+
+
+def _count(text, word):
+    return len(re.findall(rf"(?<![\w$]){word}(?![\w$])", text))
+
+
+def test_rtl_files_generated_and_balanced():
+    files = rtl.generate_column(SPEC)
+    assert set(files) >= {
+        "rnl_unit.v", "neuron.v", "wta_inhibit.v", "stdp_unit.v",
+        "tnn_column_t65x2.v", "tb_t65x2.v",
+    }
+    for name, text in files.items():
+        assert _count(text, "module") == _count(text, "endmodule") == 1, name
+        assert _count(text, "begin") == _count(text, "end"), name
+        assert _count(text, "generate") == _count(text, "endgenerate"), name
+
+
+def test_rtl_top_parameters_match_spec():
+    top = rtl.generate_column_top(SPEC)
+    assert "parameter P      = 65" in top
+    assert "parameter Q      = 2" in top
+    assert "parameter W_BITS = 3" in top
+    assert f"THETA({SPEC.theta})" in top
+    assert "stdp_unit" in top and "rnl_unit" in top and "wta_inhibit" in top
+
+
+def test_rtl_module_interfaces():
+    u = rtl.generate_rnl_unit(SPEC)
+    for port in ("clk", "rst", "in_spike", "weight", "ramping"):
+        assert re.search(rf"\b{port}\b", u), port
+    s = rtl.generate_stdp_unit(SPEC)
+    for port in ("gamma_end", "x_spiked", "y_spiked", "lfsr_capture"):
+        assert re.search(rf"\b{port}\b", s), port
+
+
+def test_netlist_stats_linear_in_synapses():
+    s1 = rtl.netlist_stats(rtl.ColumnSpec("a", 100, 2, 50))
+    s2 = rtl.netlist_stats(rtl.ColumnSpec("b", 200, 2, 50))
+    assert s2["synapses"] == 2 * s1["synapses"]
+    # per-synapse flop cost dominates
+    assert s2["flops"] > 1.8 * s1["flops"]
+
+
+def test_tcl_scripts_reference_design_and_library():
+    scripts = tcl.generate_flow_scripts(SPEC, "tnn7")
+    synth = scripts["synth_tnn7.tcl"]
+    assert "tnn_column_t65x2" in synth and "syn_map" in synth
+    assert "TNN7" in synth or "tnn7" in synth
+    pnr = scripts["pnr_tnn7.tcl"]
+    assert "routeDesign" in pnr and "report_power -leakage" in pnr
+    # paper scope note: no DRC/LVS signoff
+    assert "DRC" in pnr
+
+
+def test_flow_matches_paper_tables_within_jitter():
+    """ModelExecutor interpolates through Tables III/IV; every cell must
+    land within the 2% P&R-noise jitter envelope."""
+    for name in all_benchmarks():
+        spec = hardware_spec(name)
+        idx = [b for b, _ in pdk.PAPER_DESIGNS].index(name)
+        for lib in pdk.LIBRARIES:
+            res = flow.run_flow(spec, lib)
+            area_ref = pdk.PAPER_AREA[lib][idx]
+            leak_ref = pdk.PAPER_LEAKAGE[lib][idx]
+            assert abs(res.area_um2 - area_ref) / area_ref < 0.025, (name, lib)
+            assert abs(res.leakage_uw - leak_ref) / leak_ref < 0.025, (name, lib)
+
+
+def test_flow_writes_artifacts():
+    with tempfile.TemporaryDirectory() as d:
+        res = flow.run_flow(SPEC, "asap7", build_root=d)
+        base = os.path.join(d, "t65x2_asap7")
+        assert os.path.exists(os.path.join(base, "tnn_column_t65x2.v"))
+        assert os.path.exists(os.path.join(base, "synth_asap7.tcl"))
+        assert os.path.exists(os.path.join(base, "flow_result.json"))
+        rpt = os.path.join(base, "reports",
+                           "tnn_column_t65x2_asap7_pnr_summary.rpt")
+        assert os.path.exists(rpt)
+        assert res.total_runtime_s > 0
+
+
+def test_cadence_executor_refuses_cleanly():
+    with pytest.raises(RuntimeError):
+        flow.run_flow(SPEC, "tnn7", executor=flow.CadenceExecutor())
+
+
+def test_paper_forecaster_reproduces_table5():
+    pf = PaperForecaster()
+    # Table V: 6750 -> FC area 37435.1 (+0.2% reported error basis), leak 35.77
+    assert abs(pf.area_um2(6750) - 37435.1) < 0.5
+    assert abs(pf.leakage_uw(6750) - 35.79) < 0.05
+    assert abs(pf.area_um2(130) - 627.9) < 0.5  # smallest design row
+
+
+def test_refit_forecaster_close_to_paper_model():
+    runs = [flow.run_flow(hardware_spec(n), "tnn7") for n in all_benchmarks()]
+    fc = Forecaster()
+    fc.add_runs(runs)
+    fc.fit("tnn7")
+    a = fc.area_um2(6750)
+    assert abs(a - 35303.88) / 35303.88 < 0.05  # near the paper's actual
+
+
+def test_tnn7_vs_asap7_headline_reductions():
+    syn = [s for _, s in pdk.PAPER_DESIGNS]
+    area = np.mean([
+        1 - pdk.MODELS["tnn7"].area_um2(s) / pdk.MODELS["asap7"].area_um2(s)
+        for s in syn
+    ])
+    leak = np.mean([
+        1 - pdk.MODELS["tnn7"].leakage_uw(s) / pdk.MODELS["asap7"].leakage_uw(s)
+        for s in syn
+    ])
+    assert abs(area - 0.321) < 0.05   # paper: 32.1%
+    assert abs(leak - 0.386) < 0.06   # paper: 38.6%
+
+
+def test_runtime_model_headline_claims():
+    spec = hardware_spec("WordSynonyms")  # largest
+    asap = flow.run_flow(spec, "asap7")
+    tnn7 = flow.run_flow(spec, "tnn7")
+    synth_x = asap.synth_runtime_s / tnn7.synth_runtime_s
+    total_red = 1 - tnn7.total_runtime_s / asap.total_runtime_s
+    assert 2.5 < synth_x < 3.6          # ~3x synthesis speedup
+    assert 0.40 < total_red < 0.55      # ~47% total-flow reduction

@@ -1,0 +1,115 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + properties.
+
+Spike times are integers, so the RNL kernel is checked with exact equality
+(not allclose); the STDP kernel is float and uses allclose.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import neuron
+from repro.core.types import ColumnConfig, NeuronConfig
+from repro.kernels import ops, ref
+from repro.kernels.rnl_response import make_weight_planes, rnl_fire_pallas
+from repro.kernels.stdp_update import stdp_update_pallas
+
+SHAPE_SWEEP = [
+    # (B, p, q, t_max, w_max) — includes the paper's column geometries
+    (4, 13, 3, 32, 7),
+    (8, 65, 2, 64, 7),
+    (2, 96, 2, 100, 7),
+    (3, 270, 25, 256, 7),
+    (16, 31, 7, 48, 3),
+    (1, 129, 9, 128, 15),
+]
+
+
+@pytest.mark.parametrize("B,p,q,t_max,w_max", SHAPE_SWEEP)
+def test_rnl_kernel_exact_vs_oracle(B, p, q, t_max, w_max):
+    rng = np.random.default_rng(B * p + q)
+    t_in = jnp.asarray(rng.integers(0, t_max + 8, (B, p)), jnp.int32)
+    w = jnp.asarray(rng.integers(0, w_max + 1, (p, q)), jnp.float32)
+    thr = float(rng.uniform(1, p * w_max / 6))
+    got = rnl_fire_pallas(t_in, w, thr, t_max, w_max)
+    want = ref.rnl_fire_ref(t_in, w, thr, t_max)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_rnl_kernel_dtype_int16_inputs():
+    """Times arriving as other int dtypes are accepted via f32 staging."""
+    rng = np.random.default_rng(0)
+    t_in = jnp.asarray(rng.integers(0, 40, (4, 17)), jnp.int16).astype(jnp.int32)
+    w = jnp.asarray(rng.integers(0, 8, (17, 3)), jnp.float32)
+    got = rnl_fire_pallas(t_in, w, 9.0, 40, 7)
+    want = ref.rnl_fire_ref(t_in, w, 9.0, 40)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 6),
+    p=st.integers(2, 40),
+    q=st.integers(1, 6),
+    t_max=st.sampled_from([16, 32, 80]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rnl_kernel_property(b, p, q, t_max, seed):
+    rng = np.random.default_rng(seed)
+    t_in = jnp.asarray(rng.integers(0, t_max + 4, (b, p)), jnp.int32)
+    w = jnp.asarray(rng.integers(0, 8, (p, q)), jnp.float32)
+    thr = float(rng.uniform(0.5, p * 2))
+    got = rnl_fire_pallas(t_in, w, thr, t_max, 7)
+    want = ref.rnl_fire_ref(t_in, w, thr, t_max)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_one_hot_plane_algebra():
+    """min(relu(d), w) == relu(d) - sum_v 1[w==v] relu(d - v)."""
+    rng = np.random.default_rng(1)
+    t_in = jnp.asarray(rng.integers(0, 40, (3, 21)), jnp.int32)
+    w = jnp.asarray(rng.integers(0, 8, (21, 4)), jnp.float32)
+    a = ref.rnl_fire_ref(t_in, w, 11.0, 32)
+    b = ref.rnl_fire_ref_planes(t_in, w, 11.0, 32, 7)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_weight_planes_partition():
+    w = jnp.asarray([[0, 3], [7, 1]], jnp.float32)
+    planes = make_weight_planes(w, 7)
+    assert planes.shape == (8, 2, 2)
+    np.testing.assert_allclose(np.asarray(planes.sum(0)), 1.0)  # partition
+
+
+@pytest.mark.parametrize("p,q", [(13, 3), (270, 25), (650, 130), (7, 1)])
+def test_stdp_kernel_vs_oracle(p, q):
+    rng = np.random.default_rng(p)
+    w = jnp.asarray(rng.uniform(0, 7, (p, q)), jnp.float32)
+    x = jnp.asarray(rng.integers(0, 20, (p,)), jnp.int32)
+    y = jnp.asarray(rng.integers(0, 20, (q,)), jnp.int32)
+    got = stdp_update_pallas(w, x, y, 0.5, 0.5, 1 / 1024, 7, 16)
+    want = ref.stdp_ref(w, x, y, 0.5, 0.5, 1 / 1024, 7, 16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_kernel_column_forward_matches_core():
+    """ops.column_forward (kernel path) == core solver on integer weights."""
+    cfg = ColumnConfig(p=65, q=2, t_max=64, neuron=NeuronConfig(threshold=20.0))
+    rng = np.random.default_rng(3)
+    params = {"w": jnp.asarray(rng.integers(0, 8, (65, 2)), jnp.float32)}
+    x = jnp.asarray(rng.integers(0, 64, (9, 65)), jnp.int32)
+    y_kernel = ops.column_forward(params, x, cfg)
+    t_core = neuron.fire_times(x, params["w"], cfg.neuron, cfg.t_max, "event")
+    y_core = ref.wta_ref(t_core, 1, cfg.t_max)
+    np.testing.assert_array_equal(np.asarray(y_kernel), np.asarray(y_core))
+
+
+def test_kernel_online_training_runs():
+    cfg = ColumnConfig(p=16, q=2, t_max=32, neuron=NeuronConfig(threshold=8.0))
+    rng = np.random.default_rng(4)
+    params = {"w": jnp.asarray(rng.integers(0, 8, (16, 2)), jnp.float32)}
+    x = jnp.asarray(rng.integers(0, 32, (6, 16)), jnp.int32)
+    out = ops.train_volleys(params, x, cfg)
+    w = np.asarray(out["w"])
+    assert w.shape == (16, 2) and np.all(w >= 0) and np.all(w <= 7)

@@ -1,0 +1,178 @@
+"""LM model zoo: per-arch smoke tests + cross-path consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models import transformer as T
+
+
+def _batch(cfg, B=2, S=16):
+    rng = jax.random.key(7)
+    b = {
+        "tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.family == "audio":
+        b["frames"] = jnp.ones((B, cfg.enc_seq, cfg.d_model), jnp.float32)
+    return b
+
+
+@pytest.mark.parametrize("arch_id", C.ARCH_IDS)
+def test_arch_smoke_train_step(arch_id):
+    """Reduced config: one forward/train step on CPU; shapes + no NaNs."""
+    cfg = C.get_arch(arch_id, smoke=True)
+    params = T.init_params(jax.random.key(0), cfg)
+    batch = _batch(cfg)
+    loss, metrics = T.loss_fn(params, batch, cfg)
+    assert np.isfinite(float(loss)), arch_id
+    logits = T.forward(params, batch["tokens"], cfg,
+                       frames=batch.get("frames"))
+    assert logits.shape == (2, 16, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    grads = jax.grad(lambda p: T.loss_fn(p, batch, cfg)[0])(params)
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0, arch_id
+
+
+@pytest.mark.parametrize("arch_id", C.ARCH_IDS)
+def test_arch_smoke_serve(arch_id):
+    """Prefill + 2 decode steps must produce finite logits."""
+    cfg = C.get_arch(arch_id, smoke=True)
+    params = T.init_params(jax.random.key(0), cfg)
+    batch = _batch(cfg)
+    cache, lg = T.prefill(params, batch["tokens"], cfg, max_len=24,
+                          frames=batch.get("frames"))
+    for _ in range(2):
+        cache, lg = T.decode_step(params, cache, batch["tokens"][:, :1], cfg)
+    assert lg.shape == (2, 1, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(lg, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch_id", ["qwen3-14b", "zamba2-7b", "mamba2-370m",
+                                     "olmoe-1b-7b", "whisper-medium"])
+def test_serve_matches_forward(arch_id):
+    """prefill+decode logits must equal the training forward (per token)."""
+    cfg = C.get_arch(arch_id, smoke=True)
+    params = T.init_params(jax.random.key(1), cfg)
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.key(2), (B, S), 0, cfg.vocab_size)
+    frames = (jnp.ones((B, cfg.enc_seq, cfg.d_model), jnp.float32)
+              if cfg.family == "audio" else None)
+    full = np.asarray(T.forward(params, toks, cfg, frames=frames), np.float32)
+    cache, lg = T.prefill(params, toks[:, : S // 2], cfg, max_len=S + 2,
+                          frames=frames)
+    outs = [np.asarray(lg, np.float32)]
+    for t in range(S // 2, S):
+        cache, lg = T.decode_step(params, cache, toks[:, t : t + 1], cfg)
+        outs.append(np.asarray(lg, np.float32))
+    served = np.concatenate(outs, axis=1)
+    err = np.abs(served - full).max() / (np.abs(full).max() + 1e-9)
+    assert err < 3e-3, (arch_id, err)
+
+
+def test_full_configs_match_assignment_table():
+    """The exact published hyper-parameters from the assignment block."""
+    expect = {
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "qwen3-14b": (40, 5120, 40, 8, 17408, 151936),
+        "granite-3-8b": (40, 4096, 32, 8, 12800, 49155),
+        "starcoder2-15b": (40, 6144, 48, 4, 24576, 49152),
+        "deepseek-coder-33b": (62, 7168, 56, 8, 19200, 32256),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+        "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+        "mamba2-370m": (48, 1024, 0, 0, 0, 50280),
+    }
+    for arch_id, (L, D, H, KV, F, V) in expect.items():
+        cfg = C.get_arch(arch_id)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_ff, cfg.vocab_size) == (L, D, H, KV, F, V), arch_id
+    assert C.get_arch("kimi-k2-1t-a32b").n_experts == 384
+    assert C.get_arch("kimi-k2-1t-a32b").top_k == 8
+    assert C.get_arch("olmoe-1b-7b").n_experts == 64
+    assert C.get_arch("zamba2-7b").ssm_state == 64
+    assert C.get_arch("mamba2-370m").ssm_state == 128
+    assert C.get_arch("qwen3-14b").qk_norm
+    assert C.get_arch("qwen2-vl-7b").mrope
+
+
+def test_kimi_is_about_a_trillion_params():
+    cfg = C.get_arch("kimi-k2-1t-a32b")
+    n = cfg.param_count()
+    assert 0.9e12 < n < 1.2e12, n
+    a = cfg.active_param_count()
+    assert 25e9 < a < 40e9, a  # "a32b"
+
+
+def test_moe_paths_agree_with_reference():
+    cfg = dataclasses.replace(
+        C.get_arch("olmoe-1b-7b", smoke=True), moe_capacity_factor=16.0
+    )
+    p = moe_lib.init_moe(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 24, cfg.d_model), jnp.float32)
+    y_ref = np.asarray(moe_lib.moe_reference(x, p, cfg))
+    for impl in ("gathered", "ragged"):
+        c = dataclasses.replace(cfg, moe_impl=impl)
+        y = np.asarray(moe_lib.moe_apply(x, p, c, mesh=None))
+        err = np.abs(y_ref - y).max() / (np.abs(y_ref).max() + 1e-9)
+        assert err < 1e-4, impl
+
+
+def test_moe_drop_rate_negligible_at_cf2():
+    """With cf=2 and near-uniform routing, dropped assignments are rare."""
+    cfg = C.get_arch("olmoe-1b-7b", smoke=True)  # cf 4.0 in smoke; force 2
+    cfg = dataclasses.replace(cfg, moe_capacity_factor=2.0)
+    p = moe_lib.init_moe(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (4, 64, cfg.d_model), jnp.float32)
+    y_drop = np.asarray(moe_lib.moe_apply(x, p, cfg, mesh=None))
+    y_ref = np.asarray(moe_lib.moe_reference(x, p, cfg))
+    # dropped tokens show up as rows where outputs differ; require < 15%
+    row_err = np.abs(y_drop - y_ref).max(axis=-1) > 1e-5
+    assert row_err.mean() < 0.15
+
+
+def test_ssd_chunked_equals_sequential():
+    rng = np.random.default_rng(0)
+    B, L, H, dh, N = 2, 29, 3, 8, 16
+    x = jnp.asarray(rng.normal(size=(B, L, H, dh)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (B, L, H)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2, (H,)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B, L, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(B, L, N)), jnp.float32)
+    y_seq, S_seq = ssm_lib.ssd_sequential(x, dt, A, Bm, Cm)
+    for chunk in (1, 8, 29, 64):
+        y_ch, S_ch = ssm_lib.ssd_chunked(x, dt, A, Bm, Cm, chunk)
+        np.testing.assert_allclose(np.asarray(y_ch), np.asarray(y_seq),
+                                   rtol=3e-4, atol=3e-4)
+        np.testing.assert_allclose(np.asarray(S_ch), np.asarray(S_seq),
+                                   rtol=3e-4, atol=3e-4)
+
+
+def test_unroll_scans_same_numerics():
+    cfg = C.get_arch("qwen3-14b", smoke=True)
+    params = T.init_params(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (2, 12), 0, cfg.vocab_size)
+    a = np.asarray(T.forward(params, toks, cfg), np.float32)
+    cfg_u = dataclasses.replace(cfg, unroll_scans=True, kv_chunk=64)
+    b = np.asarray(T.forward(params, toks, cfg_u), np.float32)
+    np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+def test_vocab_padding_masked_in_loss():
+    cfg = dataclasses.replace(
+        C.get_arch("granite-3-8b", smoke=True), vocab_size=250, vocab_pad_to=256
+    )
+    assert cfg.vocab_padded == 256
+    params = T.init_params(jax.random.key(0), cfg)
+    batch = _batch(cfg)
+    batch = {k: jnp.clip(v, 0, 249) if v.dtype == jnp.int32 else v
+             for k, v in batch.items()}
+    loss, _ = T.loss_fn(params, batch, cfg)
+    assert np.isfinite(float(loss))
