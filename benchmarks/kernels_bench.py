@@ -11,10 +11,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_call
-from repro.kernels import ref
+from repro.core.types import ColumnConfig, NeuronConfig
+from repro.kernels import fused_column, ref
 from repro.kernels.rnl_response import rnl_fire_pallas
 
 CASES = [(64, 65, 2, 64), (64, 270, 25, 64), (16, 637, 2, 256)]
+FUSED_CASES = [(65, 2, 64), (470, 5, 64)]  # one fused train-step per volley
 
 
 def run() -> list:
@@ -37,6 +39,31 @@ def run() -> list:
         rows.append({
             "case": f"B{B}_p{p}_q{q}_t{t_max}",
             "pallas_us": us_p, "ref_us": us_r, "mxu_flops": mxu_flops,
+        })
+
+    # fused column step (fire + WTA + STDP in one invocation), 8 volleys:
+    # pallas column = the actual kernel (interpreter off-TPU), oracle
+    # column = the jnp reference lowering of the same fused step.
+    for p, q, t_max in FUSED_CASES:
+        cfg = ColumnConfig(
+            p=p, q=q, t_max=t_max, neuron=NeuronConfig(threshold=p * 7 / 8.0)
+        )
+        params = {"w": jnp.asarray(rng.integers(0, 8, (p, q)), jnp.float32)}
+        x = jnp.asarray(rng.integers(0, t_max, (8, p)), jnp.int32)
+
+        def k_fused(lowering):
+            out, _ = fused_column.fit_fused(
+                params, x, cfg, epochs=1, lowering=lowering
+            )
+            jax.block_until_ready(out["w"])
+
+        kernel_lowering = "mosaic" if jax.default_backend() == "tpu" else "interpret"
+        us_k = time_call(k_fused, kernel_lowering)
+        us_r = time_call(k_fused, "reference")
+        mxu_flops = 2 * 8 * 8 * p * q * t_max  # planes x volleys
+        rows.append({
+            "case": f"fused_step_p{p}_q{q}_t{t_max}",
+            "pallas_us": us_k, "ref_us": us_r, "mxu_flops": mxu_flops,
         })
     return rows
 

@@ -9,6 +9,7 @@ Emits ``name,us_per_call,derived`` CSV rows (plus human tables) for:
   fig3     — Fig. 3  P&R runtime ASAP7 vs TNN7
   table5   — Table V  area/leakage forecasting + errors
   kernels  — Pallas kernel sweeps (beyond paper)
+  train    — fused online-STDP training vs legacy loop (BENCH_train.json)
   roofline — §Roofline report from dry-run artifacts (if present)
 """
 from __future__ import annotations
@@ -25,6 +26,7 @@ from benchmarks import (
     table2_clustering,
     table34_silicon,
     table5_forecast,
+    train_bench,
 )
 
 MODULES = {
@@ -34,6 +36,7 @@ MODULES = {
     "fig3": fig3_runtime,
     "table5": table5_forecast,
     "kernels": kernels_bench,
+    "train": train_bench,
     "roofline": roofline,
 }
 

@@ -1,0 +1,94 @@
+"""Fused online-STDP training benchmark — the ISSUE 1 perf trajectory.
+
+Times the fused single-scan training path (one jitted, donated lax.scan over
+epochs x volleys, fused fire+WTA+STDP body) against the legacy per-epoch
+batch-stale loop, on paper column geometries.  Emits ``BENCH_train.json``
+(us/volley + MXU FLOPs of the fused kernel algebra) so the perf trajectory
+is tracked from this PR onward; later PRs append comparable numbers.
+
+MXU FLOPs count the one-hot plane matmuls of the fused Pallas kernel
+(2 * (w_max+1) * p * q * t_max per volley) — the work the TPU lowering puts
+on the systolic array; off-TPU the reference lowering does the same algebra
+on the VPU-equivalent.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import backend, column
+from repro.core.types import ColumnConfig, NeuronConfig
+
+# (name, B volleys, p, q, t_max) — Beef-shaped default plus small/large cols
+CASES = [
+    ("col65x2", 64, 65, 2, 64),
+    ("col470x5", 120, 470, 5, 64),
+    ("col152x2", 64, 152, 2, 100),
+]
+EPOCHS = 4
+
+
+def run() -> list:
+    rows = []
+    rng = np.random.default_rng(0)
+    for name, B, p, q, t_max in CASES:
+        cfg = ColumnConfig(
+            p=p, q=q, t_max=t_max,
+            neuron=NeuronConfig(threshold=p * 7 / 8.0),
+        )
+        params = {
+            "w": jnp.asarray(rng.integers(0, 8, (p, q)), jnp.float32)
+        }
+        x = jnp.asarray(rng.integers(0, t_max, (B, p)), jnp.int32)
+
+        def fused():
+            jax.block_until_ready(
+                column.fit(params, x, cfg, epochs=EPOCHS)["w"]
+            )
+
+        def legacy():
+            pr = params
+            for _ in range(EPOCHS):
+                pr, _ = column.train_step(pr, x, cfg, update="batch")
+            jax.block_until_ready(pr["w"])
+
+        us_fused = time_call(fused)
+        us_legacy = time_call(legacy)
+        volleys = EPOCHS * B
+        mxu_flops = 2 * (cfg.neuron.w_max + 1) * p * q * t_max
+        rows.append({
+            "case": name,
+            "backend": backend.resolve("auto", cfg, training=True),
+            "lowering": backend.pallas_lowering(),
+            "fused_us_per_volley": us_fused / volleys,
+            "legacy_us_per_volley": us_legacy / volleys,
+            "speedup": us_legacy / max(us_fused, 1e-9),
+            "mxu_flops_per_volley": mxu_flops,
+        })
+    return rows
+
+
+def main(argv=None) -> None:
+    rows = run()
+    print("\n# Fused online-STDP training vs legacy per-epoch loop")
+    print("| case | backend | fused us/volley | legacy us/volley | speedup | MXU flops/volley |")
+    print("|---|---|---|---|---|---|")
+    for r in rows:
+        print(f"| {r['case']} | {r['backend']}/{r['lowering']} | "
+              f"{r['fused_us_per_volley']:.1f} | {r['legacy_us_per_volley']:.1f} | "
+              f"{r['speedup']:.2f}x | {r['mxu_flops_per_volley']:.2e} |")
+    out = pathlib.Path("BENCH_train.json")
+    out.write_text(json.dumps(rows, indent=2) + "\n")
+    print(f"wrote {out.resolve()}")
+    for r in rows:
+        emit(f"train/{r['case']}", r["fused_us_per_volley"],
+             f"speedup={r['speedup']:.2f}x flops={r['mxu_flops_per_volley']:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,284 @@
+"""Unified simulation-backend registry and central accelerator dispatch.
+
+Before this module existed, ``core/column.py`` and ``kernels/ops.py`` were
+two parallel implementations of the same column semantics, and every Pallas
+entry point re-decided ``interpret=True`` on its own.  All execution-path
+policy now lives here:
+
+* **Registry** — three named backends sharing one contract:
+    'event'  — closed-form event-driven solver (exact for RNL/SNL).
+    'cycle'  — cycle-accurate lax.scan (bit-identical to generated RTL,
+               required for LIF).
+    'pallas' — the fused column step (``kernels/fused_column.py``): RNL fire
+               + k-WTA + expected STDP in one kernel invocation.
+  Each backend provides ``fire`` (batched post-WTA forward) and ``fit``
+  (online STDP training as ONE jitted, donated lax.scan over epochs x
+  volleys — a single compilation per config, no per-epoch dispatch).
+
+* **Lowering policy** — ``pallas_interpret()`` / ``pallas_lowering()`` are
+  the ONE place that inspects ``jax.default_backend()``.  On TPU the fused
+  step compiles through Mosaic; elsewhere it lowers to the pure-jnp
+  reference body (same algebra, same results) because the Pallas
+  interpreter is a validation tool, not an execution engine.  Pass
+  ``lowering='interpret'`` explicitly to validate the kernel off-TPU.
+
+* **Resolution** — ``resolve(mode, cfg, training=...)`` maps the public
+  ``mode`` knob ('auto' | 'event' | 'cycle' | 'pallas') to a registry name.
+  'auto' keeps the paper's hybrid forward semantics (event where exact,
+  cycle for LIF) and routes *training* to the fused path whenever the
+  config fits its contract (RNL, expected STDP, index tie-break).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import neuron, stdp, wta
+from repro.core.types import ColumnConfig, TIME_DTYPE
+from repro.kernels import fused_column
+
+
+# ----------------------------------------------------------- central policy
+def on_tpu() -> bool:
+    """True iff jax is executing on TPU.  The ONLY backend probe."""
+    return jax.default_backend() == "tpu"
+
+
+def pallas_interpret() -> bool:
+    """Central ``interpret`` decision for raw Pallas kernel entry points."""
+    return not on_tpu()
+
+
+def pallas_lowering() -> str:
+    """How the fused column step should lower on this host.
+
+    'mosaic' on TPU (real kernels), 'reference' elsewhere — the jnp body of
+    the same fused step; the interpreter is only ever chosen explicitly.
+    """
+    return "mosaic" if on_tpu() else "reference"
+
+
+# ------------------------------------------------------------- generic fit
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "mode", "epochs", "trace", "supervised"),
+    donate_argnums=(0,),
+)
+def _solver_fit_scan(
+    w: jnp.ndarray,
+    xs: jnp.ndarray,
+    y_target: Optional[jnp.ndarray],
+    rng: jax.Array,
+    cfg: ColumnConfig,
+    mode: str,
+    epochs: int,
+    trace: bool,
+    supervised: bool,
+):
+    """Online STDP as one compiled scan using the event/cycle solvers.
+
+    Handles the full config surface (LIF, stochastic STDP, random/all WTA
+    tie-breaks, supervised targets) that the fused step does not.
+    """
+    solver = (
+        neuron.fire_times_event if mode == "event" else neuron.fire_times_cycle
+    )
+    n = xs.shape[0]
+
+    def volley(carry, inp):
+        wc, key = carry
+        xt, yt, i = inp
+        kv = jax.random.fold_in(key, i)
+        k_wta, k_stdp = jax.random.split(kv)
+        t = solver(xt[None], wc, cfg.neuron, cfg.t_max)[0]
+        y, _ = wta.wta(
+            t, cfg.wta, cfg.t_max,
+            rng=k_wta if cfg.wta.tie_break == "random" else None,
+        )
+        teacher = yt if supervised else y
+        w2 = stdp.stdp_update(
+            wc, xt, teacher, cfg.stdp, cfg.neuron.w_max, cfg.t_max,
+            rng=k_stdp if cfg.stdp.mode == "stochastic" else None,
+        )
+        return (w2, key), (y if trace else None)
+
+    yts = y_target if supervised else jnp.zeros((n, 1), TIME_DTYPE)
+
+    def epoch(carry, e):
+        wc, key = carry
+        ke = jax.random.fold_in(key, e)
+        (w2, _), ys = jax.lax.scan(
+            volley, (wc, ke), (xs, yts, jnp.arange(n))
+        )
+        return (w2, key), ys
+
+    (w, _), ys = jax.lax.scan(epoch, (w, rng), jnp.arange(epochs))
+    return w, ys
+
+
+def _solver_fit(
+    params: dict,
+    x: jnp.ndarray,
+    cfg: ColumnConfig,
+    mode: str,
+    epochs: int,
+    rng: Optional[jax.Array],
+    trace: bool,
+    y_target: Optional[jnp.ndarray] = None,
+):
+    if rng is None:
+        if cfg.wta.tie_break == "random":
+            raise ValueError("tie_break='random' requires a PRNG key")
+        if cfg.stdp.mode == "stochastic":
+            raise ValueError("stochastic STDP requires a PRNG key")
+        rng = jax.random.key(0)
+    w = jnp.array(params["w"], jnp.float32, copy=True)  # scan donates w
+    w_new, ys = _solver_fit_scan(
+        w, x, y_target, rng, cfg, mode, epochs,
+        trace, y_target is not None,
+    )
+    return {"w": w_new}, ys
+
+
+def _solver_fire(mode: str):
+    def fire(params, x, cfg, rng=None):
+        t = neuron.fire_times(x, params["w"], cfg.neuron, cfg.t_max, mode)
+        return wta.wta(t, cfg.wta, cfg.t_max, rng=rng)
+
+    return fire
+
+
+# -------------------------------------------------------------- pallas side
+def _pallas_fire(params, x, cfg: ColumnConfig, rng=None):
+    """Kernel-backed batched forward: integer-grid fire + WTA."""
+    from repro.kernels import ops  # late import: ops depends on this module
+
+    allowed = fused_column.fire_responses(pallas_lowering())
+    if cfg.neuron.response not in allowed:
+        raise ValueError(
+            f"pallas forward supports response {allowed}, got "
+            f"{cfg.neuron.response!r}; use mode='cycle'"
+        )
+    w = jnp.round(jnp.clip(params["w"], 0.0, cfg.neuron.w_max))
+    if pallas_lowering() == "reference":
+        # lax.map (not vmap): bounds the [p, q, t] dense transient to one
+        # volley instead of materializing it for the whole batch.
+        t = jax.lax.map(
+            lambda xt: fused_column.fire_dense_ref(
+                w, xt, cfg.neuron.threshold, cfg.t_max,
+                response=cfg.neuron.response,
+            ),
+            x.reshape((-1, cfg.p)),
+        ).reshape(x.shape[:-1] + (cfg.q,))
+    else:
+        t = ops.rnl_fire(
+            x.reshape((-1, cfg.p)), w, cfg.neuron.threshold, cfg.t_max,
+            cfg.neuron.w_max,
+        ).reshape(x.shape[:-1] + (cfg.q,))
+    return wta.wta(t, cfg.wta, cfg.t_max, rng=rng)
+
+
+def _pallas_fit(params, x, cfg, mode, epochs, rng, trace, y_target=None):
+    if y_target is not None:
+        # Supervised targets need the generic scan.  That is a silent
+        # semantic switch (float-weight fire instead of the fused integer
+        # grid), so it is only legal when the caller asked for 'auto'.
+        if mode == "pallas":
+            raise ValueError(
+                "the fused pallas backend has no supervised (y_target) "
+                "path; use mode='auto', 'event' or 'cycle'"
+            )
+        fallback = "cycle" if cfg.neuron.response == "lif" else "event"
+        return _solver_fit(
+            params, x, cfg, fallback, epochs, rng, trace, y_target
+        )
+    return fused_column.fit_fused(
+        params, x, cfg, epochs, lowering=pallas_lowering(), trace=trace
+    )
+
+
+# ---------------------------------------------------------------- registry
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """One simulation backend: batched forward + online-STDP training.
+
+    fire(params, x, cfg, rng) -> (post-WTA times [..., q], winner mask).
+    fit(params, x, cfg, mode, epochs, rng, trace, y_target)
+        -> (params, ys or None); ys is [epochs, N, q] online winner times.
+    """
+
+    name: str
+    fire: Callable
+    fit: Callable
+
+
+_REGISTRY: dict[str, Backend] = {}
+
+
+def register(backend: Backend) -> None:
+    _REGISTRY[backend.name] = backend
+
+
+def get(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend: {name!r} (have {sorted(_REGISTRY)})"
+        ) from None
+
+
+def names() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+register(
+    Backend(
+        "event",
+        _solver_fire("event"),
+        lambda params, x, cfg, mode, epochs, rng, trace, y_target=None:
+            _solver_fit(params, x, cfg, "event", epochs, rng, trace, y_target),
+    )
+)
+register(
+    Backend(
+        "cycle",
+        _solver_fire("cycle"),
+        lambda params, x, cfg, mode, epochs, rng, trace, y_target=None:
+            _solver_fit(params, x, cfg, "cycle", epochs, rng, trace, y_target),
+    )
+)
+register(Backend("pallas", _pallas_fire, _pallas_fit))
+
+
+def _fused_ok(cfg: ColumnConfig) -> bool:
+    # Evaluated against the STRICTEST lowering ('mosaic', RNL-only), not the
+    # host's, so 'auto' resolves identically on every backend — otherwise an
+    # SNL config would train fused (integer-grid fire) on CPU but fall back
+    # to the float-weight event solver on TPU, seed-for-seed irreproducible.
+    try:
+        fused_column.check_fusable(cfg, "mosaic")
+        return True
+    except ValueError:
+        return False
+
+
+def resolve(mode: str, cfg: ColumnConfig, training: bool = False) -> str:
+    """Map the public mode knob to a registry name.
+
+    Forward 'auto' keeps the paper's hybrid: event where exact, cycle for
+    LIF.  Training 'auto' prefers the fused pallas path whenever the config
+    fits its contract, falling back to the hybrid solvers otherwise.
+    """
+    if mode != "auto":
+        get(mode)  # validate
+        return mode
+    if cfg.neuron.response == "lif":
+        return "cycle"
+    if training and _fused_ok(cfg):
+        return "pallas"
+    return "event"

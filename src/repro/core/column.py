@@ -7,6 +7,13 @@ one input volley:
 
 Training is online: each volley's (input, winner) pair drives one STDP step.
 Weights, being the only state, live in a plain dict pytree.
+
+Execution is dispatched through the backend registry
+(``repro.core.backend``): ``mode`` accepts 'auto' | 'event' | 'cycle' |
+'pallas'.  ``fit`` runs the whole training loop as ONE jitted, donated
+``lax.scan`` over epochs x volleys (a single compilation per config); on the
+'pallas' backend the scan body is the fused column step of
+``repro.kernels.fused_column`` (fire + WTA + STDP in one kernel).
 """
 from __future__ import annotations
 
@@ -16,7 +23,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import neuron, stdp, wta
+from repro.core import backend as backend_lib
+from repro.core import stdp
 from repro.core.types import ColumnConfig, TIME_DTYPE, WEIGHT_DTYPE
 
 
@@ -43,14 +51,14 @@ def apply(
       params: {'w': [p, q]}.
       x_times: [..., p] input spike times.
       cfg: column config.
-      mode: 'auto' | 'event' | 'cycle' simulation mode.
+      mode: 'auto' | 'event' | 'cycle' | 'pallas' simulation backend.
       rng: only needed for random WTA tie-break.
 
     Returns:
       (post-WTA spike times [..., q], winner mask [..., q]).
     """
-    t_out = neuron.fire_times(x_times, params["w"], cfg.neuron, cfg.t_max, mode)
-    return wta.wta(t_out, cfg.wta, cfg.t_max, rng=rng)
+    be = backend_lib.get(backend_lib.resolve(mode, cfg))
+    return be.fire(params, x_times, cfg, rng=rng)
 
 
 def train_step(
@@ -60,22 +68,47 @@ def train_step(
     mode: str = "auto",
     rng: Optional[jax.Array] = None,
     y_target: Optional[jnp.ndarray] = None,
+    update: str = "online",
 ) -> tuple[dict, jnp.ndarray]:
-    """One online training step on a batch of volleys.
+    """One training pass over a batch of volleys.
+
+    ``update`` selects the fold semantics:
+
+      'online' (default) — true online rule, matching the hardware: each
+        volley's winners are computed from the weights as updated by every
+        preceding volley (one fused forward+STDP step per volley).
+      'batch' — legacy semantics: ALL winners are computed from the stale
+        pre-batch weights, then the STDP updates fold sequentially.  Kept as
+        an explicit option because it approximates minibatch training, but
+        it diverges from the generated RTL.
 
     Unsupervised: the WTA winners are the STDP teacher (paper default).
     Supervised: ``y_target`` [..., q] spike times override the winners.
 
-    Returns (new params, winner spike times).
+    Returns (new params, winner spike times [..., q]).
     """
-    y, _ = apply(params, x_times, cfg, mode, rng)
-    teacher = y if y_target is None else y_target
+    if update == "batch":
+        y, _ = apply(params, x_times, cfg, mode, rng)
+        teacher = y if y_target is None else y_target
+        xb = x_times.reshape((-1, cfg.p))
+        yb = teacher.reshape((-1, cfg.q))
+        w = stdp.stdp_update_batch(
+            params["w"], xb, yb, cfg.stdp, cfg.neuron.w_max, cfg.t_max,
+            rng=rng,
+        )
+        return {"w": w}, y
+    if update != "online":
+        raise ValueError(f"unknown update: {update!r}")
+
+    batch_shape = x_times.shape[:-1]
     xb = x_times.reshape((-1, cfg.p))
-    yb = teacher.reshape((-1, cfg.q))
-    w = stdp.stdp_update_batch(
-        params["w"], xb, yb, cfg.stdp, cfg.neuron.w_max, cfg.t_max, rng=rng
+    yt = None if y_target is None else y_target.reshape((-1, cfg.q))
+    name = backend_lib.resolve(mode, cfg, training=True)
+    new_params, ys = backend_lib.get(name).fit(
+        params, xb, cfg, mode, 1, rng, True, yt
     )
-    return {"w": w}, y
+    y = ys[0].reshape(batch_shape + (cfg.q,)).astype(TIME_DTYPE)
+    return new_params, y
 
 
 def fit(
@@ -86,13 +119,16 @@ def fit(
     mode: str = "auto",
     rng: Optional[jax.Array] = None,
 ) -> dict:
-    """Run unsupervised STDP for several passes over the dataset [N, p]."""
-    if rng is None:
-        rng = jax.random.key(0)
-    for e in range(epochs):
-        rng, sub = jax.random.split(rng)
-        params, _ = train_step(params, x_times, cfg, mode, rng=sub)
-    return params
+    """Run unsupervised online STDP for several passes over the data [N, p].
+
+    The whole run — every epoch, every volley — is one compiled scan with a
+    donated weight buffer; nothing is re-traced or re-padded per volley.
+    """
+    name = backend_lib.resolve(mode, cfg, training=True)
+    new_params, _ = backend_lib.get(name).fit(
+        params, x_times, cfg, mode, epochs, rng, False, None
+    )
+    return new_params
 
 
 def cluster_assignments(

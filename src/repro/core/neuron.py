@@ -23,6 +23,11 @@ Two solvers are provided and cross-validated in tests:
   solve the first threshold crossing analytically.  Exact for RNL/SNL.
 * ``fire_times_cycle``: lax.scan over hardware clock cycles, bit-identical to
   the generated RTL (the paper's cycle-accurate path; required for LIF).
+
+These solvers are the 'event' / 'cycle' members of the backend registry
+(``repro.core.backend``); the third member, 'pallas', is the fused column
+step in ``repro.kernels.fused_column`` (same firing semantics, integer
+weight grid, fire+WTA+STDP in one kernel).
 """
 from __future__ import annotations
 

@@ -2,18 +2,29 @@
 
 Ties encoding + column/network inference + online STDP + clustering metrics
 into the "rapid application exploration" loop the paper describes.  The
-``mode`` knob exposes the paper's hybrid timing model:
+``mode`` knob selects a backend from the unified registry
+(``repro.core.backend``):
 
-  'auto'  — event-driven closed form where exact (RNL/SNL), cycle-accurate
-            scan where required (LIF); this is the paper's dynamic switch.
-  'event' — force the closed form.
-  'cycle' — force cycle-accurate lax.scan (bit-identical to generated RTL).
+  'auto'   — hybrid: event-driven closed form where exact (RNL/SNL),
+             cycle-accurate scan where required (LIF); training routes to
+             the fused column step whenever the config fits its contract.
+  'event'  — force the closed form.
+  'cycle'  — force cycle-accurate lax.scan (bit-identical to generated RTL).
+  'pallas' — force the fused kernel path (Mosaic on TPU; the jnp reference
+             lowering of the same fused step elsewhere).
+
+``cluster_time_series_many`` runs a whole *design sweep* — multiple column
+configs over the same sensory stream — as ONE compiled program by padding
+every design into a shared (p, q, t_max) envelope and ``vmap``-ing the fused
+training step over the design axis (threshold / window / live-neuron count
+become traced per-design scalars).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +32,8 @@ import numpy as np
 
 from repro.core import column as column_lib
 from repro.core import encoding
-from repro.core.types import ColumnConfig
+from repro.core.types import ColumnConfig, TIME_DTYPE
+from repro.kernels import fused_column, ref
 
 
 @dataclasses.dataclass
@@ -43,6 +55,20 @@ def suggest_threshold(cfg: ColumnConfig) -> float:
     return max(1.0, 0.25 * cfg.p * cfg.neuron.w_max / 2.0)
 
 
+def _encode(x: jnp.ndarray, cfg: ColumnConfig, encoder: str) -> jnp.ndarray:
+    if encoder == "latency":
+        volleys = encoding.latency_encode(x, cfg.t_max)
+    elif encoder == "onoff":
+        volleys = encoding.onoff_encode(x, cfg.t_max)
+    else:
+        raise ValueError(f"unknown encoder: {encoder!r}")
+    if volleys.shape[-1] != cfg.p:
+        raise ValueError(
+            f"encoded width {volleys.shape[-1]} != cfg.p {cfg.p}"
+        )
+    return volleys
+
+
 def cluster_time_series(
     series: np.ndarray,
     labels: Optional[np.ndarray],
@@ -60,24 +86,13 @@ def cluster_time_series(
       labels: [N] integer class labels, or None (rand_index = nan).
       cfg: column config (p x q).
       epochs: STDP passes over the data.
-      mode: simulation mode.
+      mode: simulation backend (see module docstring).
       seed: PRNG seed.
       encoder: 'latency' or 'onoff'.
     """
     from repro.clustering.metrics import rand_index as rand_index_fn
 
-    x = jnp.asarray(series)
-    if encoder == "latency":
-        volleys = encoding.latency_encode(x, cfg.t_max)
-    elif encoder == "onoff":
-        volleys = encoding.onoff_encode(x, cfg.t_max)
-    else:
-        raise ValueError(f"unknown encoder: {encoder!r}")
-    if volleys.shape[-1] != cfg.p:
-        raise ValueError(
-            f"encoded width {volleys.shape[-1]} != cfg.p {cfg.p}"
-        )
-
+    volleys = _encode(jnp.asarray(series), cfg, encoder)
     rng = jax.random.key(seed)
     rng, init_key = jax.random.split(rng)
     params = column_lib.init_params(init_key, cfg)
@@ -93,3 +108,175 @@ def cluster_time_series(
     if labels is not None:
         ri = float(rand_index_fn(np.asarray(labels), assignments))
     return ClusteringResult(assignments, ri, params, train_seconds, mode)
+
+
+# --------------------------------------------------- batched design sweep
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "t_window", "w_max", "wta_k", "mu_capture", "mu_backoff",
+        "mu_search", "stabilize", "response", "epochs",
+    ),
+    donate_argnums=(0,),
+)
+def _sweep_fit_scan(
+    w,  # [D, p_max, q_max]
+    xs,  # [N, D, p_max] volleys (scan axis leading)
+    thresholds,  # [D]
+    t_maxes,  # [D]
+    q_actives,  # [D]
+    t_window: int,
+    w_max: int,
+    wta_k: int,
+    mu_capture: float,
+    mu_backoff: float,
+    mu_search: float,
+    stabilize: bool,
+    response: str,
+    epochs: int,
+):
+    """All designs x all epochs x all volleys in one compiled program."""
+
+    def volley(wc, xt):  # wc: [D, p, q]; xt: [D, p]
+        w2, _ = jax.vmap(
+            lambda wd, xd, th, tm, qa: fused_column.fused_step_ref(
+                wd, xd, th, t_window, w_max, wta_k, mu_capture, mu_backoff,
+                mu_search, stabilize, t_max=tm, response=response,
+                integer_fire=True, q_active=qa,
+            )
+        )(wc, xt, thresholds, t_maxes, q_actives)
+        return w2, None
+
+    def epoch(wc, _):
+        return jax.lax.scan(volley, wc, xs)
+
+    w, _ = jax.lax.scan(epoch, w, None, length=epochs)
+    return w
+
+
+@functools.partial(
+    jax.jit, static_argnames=("t_window", "wta_k", "response")
+)
+def _sweep_assign(
+    w, xs, thresholds, t_maxes, q_actives,
+    t_window: int, wta_k: int, response: str,
+):
+    """Cluster ids for every design: [N, D, p] -> [D, N]."""
+
+    def volley(_, xt):
+        def one(wd, xd, th, tm, qa):
+            t = fused_column.fire_dense_ref(
+                wd, xd, th, t_window, t_max=tm, response=response
+            )
+            qi = jnp.arange(wd.shape[1], dtype=TIME_DTYPE)
+            t = jnp.where(qi < qa, t, tm)
+            y = ref.wta_ref(t[None], wta_k, tm)[0]
+            spiked = (y < tm).any()
+            return jnp.where(spiked, jnp.argmin(y), qa).astype(TIME_DTYPE)
+
+        return 0, jax.vmap(one)(w, xt, thresholds, t_maxes, q_actives)
+
+    _, asg = jax.lax.scan(volley, 0, xs)  # [N, D]
+    return asg.T
+
+
+def cluster_time_series_many(
+    series: np.ndarray,
+    labels: Optional[np.ndarray],
+    cfgs: Sequence[ColumnConfig],
+    epochs: int = 8,
+    seed: int = 0,
+    encoder: str = "latency",
+) -> list[ClusteringResult]:
+    """Sweep several column designs over one stream as ONE compiled program.
+
+    Every design is padded into the shared (max p, max q, max t_max)
+    envelope; per-design threshold / window / live-neuron count become
+    traced scalars, and the fused training step is ``vmap``-ed over the
+    design axis — the whole sweep is a single jitted scan (plus one more for
+    assignments), compiled once.
+
+    Designs must share the response function, STDP rule, WTA config and
+    w_max (they are compile-time constants of the fused step); q, t_max and
+    threshold may vary freely.  p is pinned by the encoder — every design
+    sees the same stream, so ``cfg.p`` must equal the encoded width for all
+    of them (the padding machinery itself handles unequal p, should a
+    future per-design front-end need it).  ``train_seconds`` on every
+    result is the wall time of the whole batched sweep, not a per-design
+    share.
+
+    Returns one ClusteringResult per config, in input order.
+    """
+    from repro.clustering.metrics import rand_index as rand_index_fn
+
+    if not cfgs:
+        return []
+    c0 = cfgs[0]
+    for c in cfgs:
+        fused_column.check_fusable(c, "reference")
+        same = (
+            c.neuron.response == c0.neuron.response
+            and c.neuron.w_max == c0.neuron.w_max
+            and c.stdp == c0.stdp
+            and c.wta == c0.wta
+        )
+        if not same:
+            raise ValueError(
+                "cluster_time_series_many needs designs sharing response, "
+                "w_max, STDP and WTA configs"
+            )
+
+    x = jnp.asarray(series)
+    n = x.shape[0]
+    p_max = max(c.p for c in cfgs)
+    q_max = max(c.q for c in cfgs)
+    t_window = max(c.t_max for c in cfgs)
+    d = len(cfgs)
+
+    # Stack padded volleys [D, N, p_max]; padding is silent (>= t_window).
+    xs = jnp.full((d, n, p_max), t_window, TIME_DTYPE)
+    for i, c in enumerate(cfgs):
+        xs = xs.at[i, :, : c.p].set(_encode(x, c, encoder))
+    xs = jnp.swapaxes(xs, 0, 1)  # scan axis leading: [N, D, p_max]
+
+    rng = jax.random.key(seed)
+    rng, init_key = jax.random.split(rng)
+    keys = jax.random.split(init_key, d)
+    w0 = jnp.stack([
+        jnp.zeros((p_max, q_max), jnp.float32)
+        .at[: c.p, : c.q]
+        .set(column_lib.init_params(k, c)["w"])
+        for k, c in zip(keys, cfgs)
+    ])
+    thresholds = jnp.asarray([c.neuron.threshold for c in cfgs], jnp.float32)
+    t_maxes = jnp.asarray([c.t_max for c in cfgs], TIME_DTYPE)
+    q_actives = jnp.asarray([c.q for c in cfgs], TIME_DTYPE)
+
+    t0 = time.perf_counter()
+    w = _sweep_fit_scan(
+        w0, xs, thresholds, t_maxes, q_actives,
+        t_window=t_window, w_max=c0.neuron.w_max, wta_k=c0.wta.k,
+        mu_capture=c0.stdp.mu_capture, mu_backoff=c0.stdp.mu_backoff,
+        mu_search=c0.stdp.mu_search,
+        stabilize=c0.stdp.stabilizer == "half",
+        response=c0.neuron.response, epochs=epochs,
+    )
+    asg = np.asarray(
+        _sweep_assign(
+            w, xs, thresholds, t_maxes, q_actives,
+            t_window=t_window, wta_k=c0.wta.k,
+            response=c0.neuron.response,
+        )
+    )
+    train_seconds = time.perf_counter() - t0
+
+    results = []
+    for i, c in enumerate(cfgs):
+        ri = float("nan")
+        if labels is not None:
+            ri = float(rand_index_fn(np.asarray(labels), asg[i]))
+        params = {"w": jnp.asarray(w[i, : c.p, : c.q])}
+        results.append(
+            ClusteringResult(asg[i], ri, params, train_seconds, "pallas")
+        )
+    return results

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import zlib
 from typing import Optional
 
 import numpy as np
@@ -118,7 +119,10 @@ def make_synthetic(name: str, seed: int = 0) -> Dataset:
     if name not in BENCHMARKS:
         raise KeyError(f"unknown benchmark {name!r}")
     meta = BENCHMARKS[name]
-    rng = np.random.default_rng(abs(hash((name, seed))) % 2**32)
+    # zlib.crc32, not hash(): str hashing is randomized per process
+    # (PYTHONHASHSEED), which made the "deterministic" doubles differ
+    # between runs — benchmarks were not comparable across invocations.
+    rng = np.random.default_rng((zlib.crc32(name.encode()) + seed) % 2**32)
     L, k, n = meta["length"], meta["classes"], meta["n"]
     # Shared background component makes classes overlap (as real UCR data
     # does); per-class prototypes sit on top of it.

@@ -90,13 +90,18 @@ def flash_attention_pallas(
     causal: bool = True,
     q_blk: int = 128,
     kv_blk: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Fused flash attention (MHA layout; GQA callers pre-broadcast K/V).
 
     Sequence lengths must be multiples of the block sizes (callers pad).
-    Returns [B, Sq, H, d] in q's dtype.
+    Returns [B, Sq, H, d] in q's dtype.  ``interpret=None`` defers to the
+    central dispatch policy (``repro.core.backend.pallas_interpret()``).
     """
+    if interpret is None:
+        from repro.core import backend as backend_lib
+
+        interpret = backend_lib.pallas_interpret()
     B, Sq, H, d = q.shape
     Skv = k.shape[1]
     assert Sq % q_blk == 0 and Skv % kv_blk == 0, (Sq, Skv, q_blk, kv_blk)

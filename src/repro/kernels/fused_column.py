@@ -1,0 +1,384 @@
+"""Fused TNN column training step: RNL fire + k-WTA + expected STDP.
+
+This is the hot path of the paper's "rapid application exploration" loop:
+online STDP folds one volley at a time into the weights, so training is a
+``lax.scan`` over epochs x volleys whose body is ONE fused column step.  The
+step exists in two lowerings behind the same semantics:
+
+* ``_fused_step_pallas`` — a single ``pl.pallas_call``: the RNL body
+  potential is evaluated via the one-hot weight-plane decomposition
+  (MXU matmuls, planes built *in-kernel* from the VMEM-resident weights —
+  ``make_weight_planes`` never runs per volley), firing times fall out as
+  sub-threshold cycle counts, the k-WTA priority encoder and the per-synapse
+  expected-STDP update run in the same kernel invocation, and the updated
+  weights are written back.  Weights stay padded/resident across the whole
+  scan; padding happens once per ``fit``.
+* ``fused_step_ref`` — the pure-jnp lowering of the same algebra (dense
+  sub-threshold count over the time window).  Exact for RNL/SNL: V(t) is
+  nondecreasing, so the count of sub-threshold integer cycles *is* the first
+  crossing — bit-identical to ``mode='cycle'``.  This is what the central
+  dispatch (``repro.core.backend``) lowers to off-TPU, where the Pallas
+  interpreter would serialize 100x slower; the interpreter remains available
+  for validation via ``lowering='interpret'``.
+
+Scope (enforced by ``check_fusable``): ``response in ('rnl', 'snl')``
+(``'rnl'`` only for the Pallas lowering), expected-mode STDP, index
+tie-break WTA.  Other configs take the generic per-solver scan in
+``repro.core.backend``.
+
+The per-design quantities (threshold, t_max, active q) are traced values in
+the reference lowering, so a stacked sweep of designs can ``vmap`` over them
+— see ``repro.core.simulator.cluster_time_series_many``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.types import ColumnConfig, TIME_DTYPE
+from repro.kernels import ref
+
+LANE = 128
+SUBLANE = 8
+
+LOWERINGS = ("mosaic", "interpret", "reference")
+
+
+def _pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def fire_responses(lowering: str) -> tuple[str, ...]:
+    """Response functions the fused fire supports under a given lowering
+    (the Pallas kernel implements the RNL plane decomposition only)."""
+    return ("rnl", "snl") if lowering == "reference" else ("rnl",)
+
+
+def check_fusable(cfg: ColumnConfig, lowering: str) -> None:
+    """Raise ValueError if cfg falls outside the fused step's contract."""
+    if lowering not in LOWERINGS:
+        raise ValueError(f"unknown lowering: {lowering!r}")
+    ok_resp = fire_responses(lowering)
+    if cfg.neuron.response not in ok_resp:
+        raise ValueError(
+            f"fused step ({lowering}) supports response {ok_resp}, got "
+            f"{cfg.neuron.response!r}"
+        )
+    if cfg.stdp.mode != "expected":
+        raise ValueError("fused step supports expected-mode STDP only")
+    if cfg.wta.tie_break != "index":
+        raise ValueError("fused step supports index tie-break WTA only")
+
+
+# --------------------------------------------------------------- reference
+def fire_dense_ref(
+    w: jnp.ndarray,
+    t_in: jnp.ndarray,
+    threshold,
+    t_window: int,
+    t_max=None,
+    response: str = "rnl",
+) -> jnp.ndarray:
+    """Firing times by dense sub-threshold cycle count.  [p],[p,q] -> [q].
+
+    ``t_window`` is the static evaluation length; ``t_max`` (traced OK) is
+    the effective window — spike times >= t_max are silent and crossings at
+    or past t_max report t_max.  Exact for RNL/SNL (V nondecreasing).
+    """
+    if t_max is None:
+        t_max = t_window
+    tv = jnp.arange(t_window, dtype=jnp.float32)  # [T]
+    ti = t_in.astype(jnp.float32)
+    live = ti < t_max  # [p]
+    if response == "rnl":
+        a = jax.nn.relu(tv[None, :] - ti[:, None])  # [p, T]
+        a = jnp.where(live[:, None], a, 0.0)
+        contrib = jnp.minimum(a[:, None, :], w[:, :, None])  # [p, q, T]
+    else:  # snl
+        s = (tv[None, :] >= ti[:, None]) & live[:, None]
+        contrib = s[:, None, :].astype(w.dtype) * w[:, :, None]
+    v = contrib.sum(axis=0)  # [q, T]
+    below = (v < threshold) & (tv[None, :] < t_max)
+    count = below.sum(axis=-1)
+    return jnp.minimum(count, t_max).astype(TIME_DTYPE)
+
+
+def fused_step_ref(
+    w: jnp.ndarray,
+    t_in: jnp.ndarray,
+    threshold,
+    t_window: int,
+    w_max: int,
+    wta_k: int,
+    mu_capture: float,
+    mu_backoff: float,
+    mu_search: float,
+    stabilize: bool,
+    t_max=None,
+    response: str = "rnl",
+    integer_fire: bool = False,
+    q_active=None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One fused column step, jnp lowering.  Returns (w_new, y).
+
+    Args:
+      w: [p, q] resident weights.
+      t_in: [p] one input volley.
+      threshold / t_max / q_active: traced-friendly per-design scalars
+        (q_active masks neurons >= q_active out of WTA and STDP — used by the
+        padded multi-design sweep; None means all q are live).
+      t_window: static dense evaluation length (>= t_max).
+      integer_fire: round weights to the hardware integer grid for the fire
+        step (the Pallas lowering always does; planes need w in {0..w_max}).
+    """
+    if t_max is None:
+        t_max = t_window
+    w_fire = jnp.round(jnp.clip(w, 0.0, w_max)) if integer_fire else w
+    t_fire = fire_dense_ref(w_fire, t_in, threshold, t_window, t_max, response)
+    if q_active is not None:
+        qi = jnp.arange(w.shape[1], dtype=TIME_DTYPE)
+        t_fire = jnp.where(qi < q_active, t_fire, t_max)
+    y = ref.wta_ref(t_fire[None], wta_k, t_max)[0]
+    w_new = ref.stdp_ref(
+        w, t_in, y, mu_capture, mu_backoff, mu_search, w_max, t_max,
+        stabilize=stabilize,
+    )
+    if q_active is not None:
+        qi = jnp.arange(w.shape[1], dtype=TIME_DTYPE)
+        w_new = jnp.where(qi[None, :] < q_active, w_new, w)
+    return w_new, y
+
+
+# ------------------------------------------------------------ pallas kernel
+def _fused_kernel(
+    t_ref,  # [1, p_pad]      f32 input volley (silent >= 2 * T_pad)
+    w_ref,  # [p_pad, q_pad]  f32 resident weights
+    w_out,  # [p_pad, q_pad]  f32 updated weights
+    y_out,  # [1, q_pad]      f32 counts accumulator -> winner times
+    *,
+    t_blk: int,
+    t_max: int,
+    q: int,
+    n_planes: int,
+    threshold: float,
+    wta_k: int,
+    mu_capture: float,
+    mu_backoff: float,
+    mu_search: float,
+    w_max: int,
+    stabilize: bool,
+):
+    p_pad, q_pad = w_ref.shape
+    i = pl.program_id(0)
+    last = pl.num_programs(0) - 1
+
+    @pl.when(i == 0)
+    def _init():
+        y_out[...] = jnp.zeros_like(y_out)
+
+    # --- fire: accumulate sub-threshold cycle counts for this time block.
+    t0 = (i * t_blk).astype(jnp.float32)
+    tv = t0 + jax.lax.broadcasted_iota(jnp.float32, (1, t_blk), 1)  # [1, t_blk]
+    ti = t_ref[...].T  # [p_pad, 1] input times down the sublanes
+    a = jnp.maximum(tv - ti, 0.0)  # [p_pad, t_blk] ramps
+    base = jnp.sum(a, axis=0, keepdims=True)  # [1, t_blk]
+
+    w = w_ref[...]
+    wi = jnp.round(jnp.clip(w, 0.0, float(w_max)))  # integer fire grid
+    acc = jnp.zeros((q_pad, t_blk), jnp.float32)
+    for v in range(n_planes):  # static unroll: planes from resident weights
+        plane = (wi == float(v)).astype(jnp.float32)  # [p_pad, q_pad]
+        av = a if v == 0 else jnp.maximum(a - float(v), 0.0)
+        acc = acc + jax.lax.dot_general(
+            plane, av, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # [q_pad, t_blk]
+    vqt = base - acc  # [q_pad, t_blk] body potential
+    below = (vqt < threshold) & (tv < float(t_max))  # mask window padding
+    y_out[...] += jnp.sum(below.astype(jnp.float32), axis=1)[None, :]
+
+    # --- WTA + STDP once all time blocks have accumulated.
+    @pl.when(i == last)
+    def _finalize():
+        counts = y_out[...]  # [1, q_pad]
+        qi = jax.lax.broadcasted_iota(jnp.float32, (1, q_pad), 1)
+        t_fire = jnp.minimum(counts, float(t_max))
+        t_fire = jnp.where(qi < float(q), t_fire, float(t_max))  # pad neurons
+
+        # k-WTA priority encoder: lexicographic (time, index) packed key;
+        # keys are unique, so k unrolled min rounds find the k-th smallest.
+        big = float(t_max + 1) * q_pad
+        key = t_fire * q_pad + qi
+        rem = key
+        kth = jnp.float32(0)
+        for _ in range(wta_k):
+            kth = jnp.min(rem)
+            rem = jnp.where(rem <= kth, big, rem)
+        win = (key <= kth) & (t_fire < float(t_max))
+        y = jnp.where(win, t_fire, float(t_max))  # [1, q_pad]
+        y_out[...] = y
+
+        # expected STDP on the resident float weights (same algebra as
+        # kernels/ref.stdp_ref), padded neurons frozen.
+        x = t_ref[...].T  # [p_pad, 1]
+        xs = x < float(t_max)
+        ys = y < float(t_max)
+        if stabilize:
+            frac = jnp.clip(w * (1.0 / w_max), 0.0, 1.0)
+            eps = 1.0 / (2 * w_max)
+            s_plus = (1.0 - frac) + eps
+            s_minus = frac + eps
+        else:
+            s_plus = s_minus = jnp.ones_like(w)
+        capture = xs & ys & (x <= y)
+        backoff = (xs & ys & (x > y)) | ((~xs) & ys)
+        search = xs & (~ys)
+        delta = jnp.where(capture, mu_capture * s_plus, 0.0)
+        delta = jnp.where(backoff, -mu_backoff * s_minus, delta)
+        delta = jnp.where(search, mu_search, delta)
+        delta = jnp.where(qi < float(q), delta, 0.0)
+        w_out[...] = jnp.clip(w + delta, 0.0, float(w_max))
+
+    @pl.when(i != last)
+    def _carry():
+        w_out[...] = w
+
+
+def fused_step_pallas(
+    w_pad: jnp.ndarray,
+    t_in_pad: jnp.ndarray,
+    cfg: ColumnConfig,
+    t_blk: int = 128,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One fused Pallas column step on pre-padded operands.
+
+    Args:
+      w_pad: [p_pad, q_pad] resident weights (pad rows/cols zero).
+      t_in_pad: [1, p_pad] volley (padding/silent >= 2 * T_pad).
+      interpret: run under the Pallas interpreter — pass the value from
+        ``repro.core.backend.pallas_interpret()``; do not hardcode.
+
+    Returns:
+      (w_new [p_pad, q_pad], y [1, q_pad] post-WTA winner times, float).
+    """
+    p_pad, q_pad = w_pad.shape
+    t_pad = _pad_to(cfg.t_max, t_blk)
+    kern = functools.partial(
+        _fused_kernel,
+        t_blk=t_blk,
+        t_max=cfg.t_max,
+        q=cfg.q,
+        n_planes=cfg.neuron.w_max + 1,
+        threshold=cfg.neuron.threshold,
+        wta_k=cfg.wta.k,
+        mu_capture=cfg.stdp.mu_capture,
+        mu_backoff=cfg.stdp.mu_backoff,
+        mu_search=cfg.stdp.mu_search,
+        w_max=cfg.neuron.w_max,
+        stabilize=cfg.stdp.stabilizer == "half",
+    )
+    w_new, y = pl.pallas_call(
+        kern,
+        grid=(t_pad // t_blk,),
+        in_specs=[
+            pl.BlockSpec((1, p_pad), lambda i: (0, 0)),
+            pl.BlockSpec((p_pad, q_pad), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((p_pad, q_pad), lambda i: (0, 0)),
+            pl.BlockSpec((1, q_pad), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p_pad, q_pad), jnp.float32),
+            jax.ShapeDtypeStruct((1, q_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(t_in_pad, w_pad)
+    return w_new, y
+
+
+# ------------------------------------------------------------- fused fit
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "epochs", "lowering", "trace", "t_blk"),
+    donate_argnums=(0,),
+)
+def _fused_fit_scan(
+    w: jnp.ndarray,
+    xs: jnp.ndarray,
+    cfg: ColumnConfig,
+    epochs: int,
+    lowering: str,
+    trace: bool,
+    t_blk: int = 128,
+):
+    """One compiled program for the whole fit: scan(epochs) o scan(volleys).
+
+    ``w`` is donated — the weight buffer is updated in place across the
+    entire training run instead of round-tripping per volley.
+    """
+    if lowering == "reference":
+
+        def volley(wc, xt):
+            # integer_fire mirrors the Pallas lowering (planes need the
+            # hardware integer grid) so results agree across lowerings.
+            w2, y = fused_step_ref(
+                wc, xt, cfg.neuron.threshold, cfg.t_max, cfg.neuron.w_max,
+                cfg.wta.k, cfg.stdp.mu_capture, cfg.stdp.mu_backoff,
+                cfg.stdp.mu_search, cfg.stdp.stabilizer == "half",
+                response=cfg.neuron.response, integer_fire=True,
+            )
+            return w2, (y if trace else None)
+
+    else:
+
+        def volley(wc, xt):
+            w2, y = fused_step_pallas(
+                wc, xt[None], cfg, t_blk=t_blk,
+                interpret=lowering == "interpret",
+            )
+            yq = y[0, : cfg.q].astype(TIME_DTYPE)
+            return w2, (yq if trace else None)
+
+    def epoch(wc, _):
+        return jax.lax.scan(volley, wc, xs)
+
+    w, ys = jax.lax.scan(epoch, w, None, length=epochs)
+    return w, ys
+
+
+def fit_fused(
+    params: dict,
+    x: jnp.ndarray,
+    cfg: ColumnConfig,
+    epochs: int = 8,
+    lowering: str = "reference",
+    trace: bool = False,
+    t_blk: int = 128,
+) -> tuple[dict, jnp.ndarray | None]:
+    """Online STDP over [N, p] volleys as ONE jitted, donated scan.
+
+    Weight padding / plane setup happens here, once per fit — never per
+    volley.  Returns (params, ys) where ys is [epochs, N, q] winner times
+    when ``trace`` else None.
+    """
+    check_fusable(cfg, lowering)
+    # copy: the scan donates its weight buffer; the caller keeps params.
+    w = jnp.array(params["w"], jnp.float32, copy=True)
+    if lowering == "reference":
+        w_new, ys = _fused_fit_scan(w, x, cfg, epochs, lowering, trace)
+        return {"w": w_new}, ys
+
+    p_pad = _pad_to(cfg.p, LANE)
+    q_pad = _pad_to(cfg.q, SUBLANE)
+    t_pad = _pad_to(cfg.t_max, t_blk)
+    w_pad = jnp.zeros((p_pad, q_pad), jnp.float32).at[: cfg.p, : cfg.q].set(w)
+    xs = jnp.full(x.shape[:1] + (p_pad,), 2.0 * t_pad, jnp.float32)
+    xs = xs.at[:, : cfg.p].set(x.astype(jnp.float32))
+    xs = jnp.where(xs >= cfg.t_max, 2.0 * t_pad, xs)
+    w_new, ys = _fused_fit_scan(w_pad, xs, cfg, epochs, lowering, trace, t_blk)
+    return {"w": w_new[: cfg.p, : cfg.q]}, ys

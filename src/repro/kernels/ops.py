@@ -1,23 +1,24 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-``use_pallas`` dispatch: on CPU the kernels run under the Pallas interpreter
-(bit-exact validation); on TPU set ``interpret=False``.  The pure-jnp oracle
-path (``repro.kernels.ref``) is always available as a fallback and is what
-the core library uses for differentiable / fractional-weight paths.
+Dispatch policy lives in ONE place — ``repro.core.backend``: kernels lower
+through Mosaic on TPU and the Pallas interpreter is only ever selected
+explicitly (``interpret=True``) for validation.  The pure-jnp oracle path
+(``repro.kernels.ref``) remains available as a fallback and is what the core
+library uses for differentiable / fractional-weight paths.
+
+``train_volleys`` is a thin wrapper over the fused training scan in
+``repro.kernels.fused_column`` — one kernel invocation per volley (fire +
+WTA + STDP fused), weights resident across the scan, no per-volley padding
+or one-hot plane rebuild.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.types import ColumnConfig, TIME_DTYPE
-from repro.kernels import ref
+from repro.core.types import ColumnConfig
+from repro.kernels import fused_column, ref
 from repro.kernels.rnl_response import rnl_fire_pallas
 from repro.kernels.stdp_update import stdp_update_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def rnl_fire(
@@ -31,9 +32,7 @@ def rnl_fire(
     """Firing times for integer-weight RNL neurons. [B,p],[p,q] -> [B,q]."""
     if not use_pallas:
         return ref.rnl_fire_ref(t_in, w, threshold, t_max)
-    return rnl_fire_pallas(
-        t_in, w, threshold, t_max, w_max, interpret=not _on_tpu()
-    )
+    return rnl_fire_pallas(t_in, w, threshold, t_max, w_max)
 
 
 def column_forward(
@@ -68,26 +67,27 @@ def stdp_step(
     return stdp_update_pallas(
         w, x_times, y_times, s.mu_capture, s.mu_backoff, s.mu_search,
         cfg.neuron.w_max, cfg.t_max, stabilize=s.stabilizer == "half",
-        interpret=not _on_tpu(),
     )
 
 
 def train_volleys(
     params: dict, x: jnp.ndarray, cfg: ColumnConfig, use_pallas: bool = True
 ) -> dict:
-    """Online STDP over a batch of volleys using the fused kernels.
+    """Online STDP over a batch of volleys via the fused column step.
 
-    x: [B, p].  Semantically identical to core/column.train_step with
-    mode='event', integer weights, expected STDP.
+    x: [B, p].  Integer-grid fire, expected STDP, index tie-break — the
+    hardware semantics.  ``use_pallas=True`` always runs the actual Pallas
+    kernel (Mosaic on TPU, interpreter elsewhere — this entry point's job
+    is kernel validation); ``use_pallas=False`` runs the jnp reference
+    lowering of the same fused step (identical results).
     """
+    from repro.core import backend as backend_lib
 
-    def step(w, xt):
-        t_out = rnl_fire(
-            xt[None], jnp.round(jnp.clip(w, 0.0, cfg.neuron.w_max)),
-            cfg.neuron.threshold, cfg.t_max, cfg.neuron.w_max, use_pallas,
-        )[0]
-        y = ref.wta_ref(t_out[None], cfg.wta.k, cfg.t_max)[0]
-        return stdp_step(w, xt, y, cfg, use_pallas), None
-
-    w, _ = jax.lax.scan(step, params["w"], x)
-    return {"w": w}
+    if use_pallas:
+        lowering = "mosaic" if backend_lib.on_tpu() else "interpret"
+    else:
+        lowering = "reference"
+    new_params, _ = fused_column.fit_fused(
+        params, x, cfg, epochs=1, lowering=lowering, trace=False
+    )
+    return new_params

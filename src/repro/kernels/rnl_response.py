@@ -104,7 +104,7 @@ def rnl_fire_pallas(
     w_max: int,
     b_blk: int = 8,
     t_blk: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Fused RNL firing-time kernel entry point.
 
@@ -115,11 +115,17 @@ def rnl_fire_pallas(
       t_max: window length in cycles.
       w_max: weight ceiling (3-bit TNN7 -> 7).
       b_blk / t_blk: batch tile and time tile (lane-aligned).
-      interpret: run the Pallas interpreter (CPU validation; False on TPU).
+      interpret: None (default) defers to the central dispatch policy
+        (``repro.core.backend.pallas_interpret()``: Mosaic on TPU,
+        interpreter elsewhere); pass an explicit bool only in tests.
 
     Returns:
       [B, q] int32 firing times (t_max if the neuron never fires).
     """
+    if interpret is None:
+        from repro.core import backend as backend_lib
+
+        interpret = backend_lib.pallas_interpret()
     B, p = t_in.shape
     q = w.shape[1]
     t_pad = _pad_to(t_max, t_blk)

@@ -81,9 +81,17 @@ def stdp_update_pallas(
     stabilize: bool = True,
     p_blk: int = 256,
     q_blk: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """Fused expected STDP update.  w: [p, q]; x: [p]; y: [q] -> new w."""
+    """Fused expected STDP update.  w: [p, q]; x: [p]; y: [q] -> new w.
+
+    ``interpret=None`` defers to the central dispatch policy
+    (``repro.core.backend.pallas_interpret()``); pass a bool only in tests.
+    """
+    if interpret is None:
+        from repro.core import backend as backend_lib
+
+        interpret = backend_lib.pallas_interpret()
     p, q = w.shape
     if p <= p_blk:
         p_pad = p_blk = _pad_to(p, SUBLANE)

@@ -108,7 +108,9 @@ def test_dryrun_cell_on_tiny_mesh():
         fn = jax.jit(lambda p, b: T.loss_fn(p, b, cfg)[0],
                      in_shardings=(p_shard, b_shard))
         compiled = fn.lower(p_shapes, specs).compile()
-        assert compiled.cost_analysis()["flops"] > 0
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca  # jax version compat
+        assert ca["flops"] > 0
         coll = collective_bytes_by_kind(compiled.as_text(), total_devices=8)
         assert coll["total"] > 0  # TP/EP must move bytes
         print("DRYRUN_TINY_OK", coll["total"])
