@@ -1,10 +1,12 @@
-"""Fused online-STDP training benchmark — the ISSUE 1 perf trajectory.
+"""Fused online-STDP training benchmark — the ISSUE 1/2 perf trajectory.
 
 Times the fused single-scan training path (one jitted, donated lax.scan over
 epochs x volleys, fused fire+WTA+STDP body) against the legacy per-epoch
-batch-stale loop, on paper column geometries.  Emits ``BENCH_train.json``
+loop, on paper column geometries AND a multi-layer network (the ISSUE 2
+tentpole: ``network.fit_greedy`` as one jitted padded scan per layer vs the
+untraced per-epoch Python loop it replaced).  Emits ``BENCH_train.json``
 (us/volley + MXU FLOPs of the fused kernel algebra) so the perf trajectory
-is tracked from this PR onward; later PRs append comparable numbers.
+is tracked PR over PR; later PRs append comparable numbers.
 
 MXU FLOPs count the one-hot plane matmuls of the fused Pallas kernel
 (2 * (w_max+1) * p * q * t_max per volley) — the work the TPU lowering puts
@@ -21,8 +23,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_call
-from repro.core import backend, column
-from repro.core.types import ColumnConfig, NeuronConfig
+from repro.core import backend, column, network
+from repro.core.types import (
+    ColumnConfig, LayerConfig, NetworkConfig, NeuronConfig,
+)
 
 # (name, B volleys, p, q, t_max) — Beef-shaped default plus small/large cols
 CASES = [
@@ -73,8 +77,100 @@ def run() -> list:
     return rows
 
 
+# ---------------------------------------------------- multi-layer network
+NET_B = 64  # volleys per epoch
+
+
+def _net_cfg() -> NetworkConfig:
+    """2-layer NSPU: 4 fully-connected 96x8 columns feeding one 32x5."""
+
+    def col(p, q, t_max=64):
+        return ColumnConfig(
+            p=p, q=q, t_max=t_max, neuron=NeuronConfig(threshold=p * 7 / 8.0)
+        )
+
+    return NetworkConfig(layers=(
+        LayerConfig(columns=4, column=col(96, 8)),
+        LayerConfig(columns=1, column=col(32, 5)),
+    ), name="bench2layer")
+
+
+def run_network() -> dict:
+    """Fused per-layer scans (network.fit_greedy) vs the legacy untraced
+    per-epoch Python loop they replaced (one vmapped train_step per epoch)."""
+    net = _net_cfg()
+    rng = np.random.default_rng(1)
+    in_width = network.in_width(net)
+    params = [
+        {
+            "w": jnp.asarray(
+                rng.integers(
+                    0, 8, (l.columns, l.column.p, l.column.q)
+                ),
+                jnp.float32,
+            )
+        }
+        for l in net.layers
+    ]
+    x = jnp.asarray(
+        rng.integers(0, net.layers[0].column.t_max, (NET_B, in_width)),
+        jnp.int32,
+    )
+
+    def fused():
+        trained = network.fit_greedy(params, x, net, epochs=EPOCHS)
+        jax.block_until_ready(trained[-1]["w"])
+
+    def legacy():
+        # the pre-fusion fit_greedy: Python epochs loop, per-epoch dispatch
+        h = x
+        key = jax.random.key(0)
+        for lp, layer in zip(params, net.layers):
+            c = layer.columns
+            hc = jnp.broadcast_to(
+                h[..., None, :], h.shape[:-1] + (c, h.shape[-1])
+            )
+            w = lp["w"]
+            for _ in range(EPOCHS):
+                key, sub = jax.random.split(key)
+                keys = jax.random.split(sub, c)
+
+                def one(wi, xi, ki):
+                    p2, _ = column.train_step(
+                        {"w": wi}, xi, layer.column, rng=ki
+                    )
+                    return p2["w"]
+
+                w = jax.vmap(one, in_axes=(0, -2, 0))(w, hc, keys)
+            h = network._apply_layer({"w": w}, h, layer, "auto")
+        jax.block_until_ready(h)
+
+    us_fused = time_call(fused)
+    us_legacy = time_call(legacy)
+    volleys = EPOCHS * NET_B
+    mxu_flops = sum(
+        l.columns * 2 * (l.column.neuron.w_max + 1)
+        * l.column.p * l.column.q * l.column.t_max
+        for l in net.layers
+    )
+    return {
+        "case": "net96-4x8-1x5",
+        "backend": backend.resolve(
+            "auto", net.layers[0].column, training=True
+        ),
+        # the padded per-layer scan runs the reference lowering of the
+        # fused algebra on every host (traced per-layer scalars)
+        "lowering": "reference",
+        "fused_us_per_volley": us_fused / volleys,
+        "legacy_us_per_volley": us_legacy / volleys,
+        "speedup": us_legacy / max(us_fused, 1e-9),
+        "mxu_flops_per_volley": mxu_flops,
+    }
+
+
 def main(argv=None) -> None:
     rows = run()
+    rows.append(run_network())
     print("\n# Fused online-STDP training vs legacy per-epoch loop")
     print("| case | backend | fused us/volley | legacy us/volley | speedup | MXU flops/volley |")
     print("|---|---|---|---|---|---|")

@@ -6,7 +6,10 @@ Sweeps column geometry (q neurons) and gamma window for a target sensory
 stream, evaluates clustering quality in the functional simulator, then
 takes the best design through the hardware generator and compares the
 silicon cost of all candidates via forecasting — the "rapid application
-exploration" loop TNNGen §II-A describes.
+exploration" loop TNNGen §II-A describes.  A multi-layer variant of the
+winning column (two fully-connected columns feeding a read-out column)
+runs through the same clustering loop via
+``simulator.cluster_time_series_network``.
 """
 import tempfile
 
@@ -14,7 +17,9 @@ import numpy as np
 
 from repro.clustering.metrics import rand_index
 from repro.core import simulator
-from repro.core.types import ColumnConfig, NeuronConfig
+from repro.core.types import (
+    ColumnConfig, LayerConfig, NetworkConfig, NeuronConfig,
+)
 from repro.data import ucr
 from repro.hwgen import run_flow
 from repro.hwgen.forecast import PaperForecaster
@@ -53,6 +58,25 @@ for cfg, res in zip(cfgs, sweep):
 best = max(candidates, key=lambda c: c["ri"] / c["fc_area_um2"])
 print(f"\nselected design: q={best['q']} t_max={best['t_max']} "
       f"(RI {best['ri']:.3f}, forecast {best['fc_area_um2']:.0f} um^2)")
+
+# multi-layer variant: two copies of the winning column feed a k-way
+# read-out column; each layer trains as ONE jitted scan on the backend
+# 'auto' resolves to (fused off the bat for these RNL configs).
+l1_col = ColumnConfig(p=L, q=best["q"], t_max=best["t_max"])
+l1_col = l1_col.with_threshold(simulator.suggest_threshold(l1_col))
+l2_col = ColumnConfig(p=2 * best["q"], q=k, t_max=best["t_max"])
+l2_col = l2_col.with_threshold(simulator.suggest_threshold(l2_col))
+net = NetworkConfig(layers=(
+    LayerConfig(columns=2, column=l1_col),
+    LayerConfig(columns=1, column=l2_col),
+), name="beef_2layer")
+net_res = simulator.cluster_time_series_network(
+    ds.x[:120], ds.y[:120], net, epochs=3
+)
+net_syn = sum(l.columns * l.column.p * l.column.q for l in net.layers)
+print(f"2-layer variant ({net_syn} synapses): RI={net_res.rand_index:.3f} "
+      f"vs best single column RI={best['ri']:.3f} "
+      f"({net_res.train_seconds:.2f}s, one fused scan per layer)")
 
 with tempfile.TemporaryDirectory() as build:
     spec = ColumnSpec(name="beef_nspu", p=L, q=best["q"],

@@ -27,6 +27,10 @@ policy now lives here:
   'auto' keeps the paper's hybrid forward semantics (event where exact,
   cycle for LIF) and routes *training* to the fused path whenever the
   config fits its contract (RNL, expected STDP, index tie-break).
+
+Multi-layer networks (``repro.core.network``) resolve here too, layer by
+layer against each layer's column config.  The full contract is documented
+in ``docs/backends.md``.
 """
 from __future__ import annotations
 
@@ -63,6 +67,43 @@ def pallas_lowering() -> str:
 
 
 # ------------------------------------------------------------- generic fit
+def solver_volley_step(
+    w: jnp.ndarray,
+    x_t: jnp.ndarray,
+    key: jax.Array,
+    cfg: ColumnConfig,
+    solver_mode: str,
+    y_target: Optional[jnp.ndarray] = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One online-STDP step on the event/cycle solvers: fire -> WTA -> STDP.
+
+    This is the shared scan body of the generic (non-fused) training path —
+    ``_solver_fit_scan`` folds it over a column's volleys and
+    ``network._layer_solver_fit_scan`` additionally ``vmap``s it over a
+    layer's columns.  ``key`` must already be folded per volley; it is split
+    here for the WTA tie-break and stochastic STDP independently.
+
+    Returns (updated weights [p, q], post-WTA winner times [q]).
+    """
+    solver = (
+        neuron.fire_times_event
+        if solver_mode == "event"
+        else neuron.fire_times_cycle
+    )
+    k_wta, k_stdp = jax.random.split(key)
+    t = solver(x_t[None], w, cfg.neuron, cfg.t_max)[0]
+    y, _ = wta.wta(
+        t, cfg.wta, cfg.t_max,
+        rng=k_wta if cfg.wta.tie_break == "random" else None,
+    )
+    teacher = y if y_target is None else y_target
+    w2 = stdp.stdp_update(
+        w, x_t, teacher, cfg.stdp, cfg.neuron.w_max, cfg.t_max,
+        rng=k_stdp if cfg.stdp.mode == "stochastic" else None,
+    )
+    return w2, y
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("cfg", "mode", "epochs", "trace", "supervised"),
@@ -84,25 +125,14 @@ def _solver_fit_scan(
     Handles the full config surface (LIF, stochastic STDP, random/all WTA
     tie-breaks, supervised targets) that the fused step does not.
     """
-    solver = (
-        neuron.fire_times_event if mode == "event" else neuron.fire_times_cycle
-    )
     n = xs.shape[0]
 
     def volley(carry, inp):
         wc, key = carry
         xt, yt, i = inp
         kv = jax.random.fold_in(key, i)
-        k_wta, k_stdp = jax.random.split(kv)
-        t = solver(xt[None], wc, cfg.neuron, cfg.t_max)[0]
-        y, _ = wta.wta(
-            t, cfg.wta, cfg.t_max,
-            rng=k_wta if cfg.wta.tie_break == "random" else None,
-        )
-        teacher = yt if supervised else y
-        w2 = stdp.stdp_update(
-            wc, xt, teacher, cfg.stdp, cfg.neuron.w_max, cfg.t_max,
-            rng=k_stdp if cfg.stdp.mode == "stochastic" else None,
+        w2, y = solver_volley_step(
+            wc, xt, kv, cfg, mode, y_target=yt if supervised else None
         )
         return (w2, key), (y if trace else None)
 

@@ -14,6 +14,11 @@ Execution is dispatched through the backend registry
 ``lax.scan`` over epochs x volleys (a single compilation per config); on the
 'pallas' backend the scan body is the fused column step of
 ``repro.kernels.fused_column`` (fire + WTA + STDP in one kernel).
+
+Grids of columns with inter-layer connectivity are ``repro.core.network``;
+the same ``mode`` knob resolves there layer by layer, so a column trains
+identically standalone or as a network layer.  The full backend contract is
+documented in ``docs/backends.md``.
 """
 from __future__ import annotations
 

@@ -3,7 +3,8 @@
 Ties encoding + column/network inference + online STDP + clustering metrics
 into the "rapid application exploration" loop the paper describes.  The
 ``mode`` knob selects a backend from the unified registry
-(``repro.core.backend``):
+(``repro.core.backend``) and means the same thing for single columns and
+multi-layer networks:
 
   'auto'   — hybrid: event-driven closed form where exact (RNL/SNL),
              cycle-accurate scan where required (LIF); training routes to
@@ -13,16 +14,22 @@ into the "rapid application exploration" loop the paper describes.  The
   'pallas' — force the fused kernel path (Mosaic on TPU; the jnp reference
              lowering of the same fused step elsewhere).
 
-``cluster_time_series_many`` runs a whole *design sweep* — multiple column
-configs over the same sensory stream — as ONE compiled program by padding
-every design into a shared (p, q, t_max) envelope and ``vmap``-ing the fused
-training step over the design axis (threshold / window / live-neuron count
-become traced per-design scalars).
+Three clustering front-ends share the loop:
+
+* ``cluster_time_series`` — one column design, one stream.
+* ``cluster_time_series_many`` — a whole *design sweep* as ONE compiled
+  program: every design is padded into a shared (p, q, t_max) envelope and
+  the fused training step is ``vmap``-ed over the design axis (threshold /
+  window / live-neuron count become traced per-design scalars); the padded
+  scans live in ``repro.kernels.fused_column``.
+* ``cluster_time_series_network`` — a multi-layer ``NetworkConfig`` design
+  through the same encode -> fit -> assign -> rand-index loop, trained
+  greedily layer-by-layer via ``network.fit_greedy`` (each layer one jitted
+  donated scan on the resolved backend).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Optional, Sequence
 
@@ -32,8 +39,8 @@ import numpy as np
 
 from repro.core import column as column_lib
 from repro.core import encoding
-from repro.core.types import ColumnConfig, TIME_DTYPE
-from repro.kernels import fused_column, ref
+from repro.core.types import ColumnConfig, NetworkConfig, TIME_DTYPE
+from repro.kernels import fused_column
 
 
 @dataclasses.dataclass
@@ -55,18 +62,24 @@ def suggest_threshold(cfg: ColumnConfig) -> float:
     return max(1.0, 0.25 * cfg.p * cfg.neuron.w_max / 2.0)
 
 
-def _encode(x: jnp.ndarray, cfg: ColumnConfig, encoder: str) -> jnp.ndarray:
+def _encode_width(
+    x: jnp.ndarray, t_max: int, width: int, encoder: str
+) -> jnp.ndarray:
     if encoder == "latency":
-        volleys = encoding.latency_encode(x, cfg.t_max)
+        volleys = encoding.latency_encode(x, t_max)
     elif encoder == "onoff":
-        volleys = encoding.onoff_encode(x, cfg.t_max)
+        volleys = encoding.onoff_encode(x, t_max)
     else:
         raise ValueError(f"unknown encoder: {encoder!r}")
-    if volleys.shape[-1] != cfg.p:
+    if volleys.shape[-1] != width:
         raise ValueError(
-            f"encoded width {volleys.shape[-1]} != cfg.p {cfg.p}"
+            f"encoded width {volleys.shape[-1]} != design input width {width}"
         )
     return volleys
+
+
+def _encode(x: jnp.ndarray, cfg: ColumnConfig, encoder: str) -> jnp.ndarray:
+    return _encode_width(x, cfg.t_max, cfg.p, encoder)
 
 
 def cluster_time_series(
@@ -111,75 +124,6 @@ def cluster_time_series(
 
 
 # --------------------------------------------------- batched design sweep
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "t_window", "w_max", "wta_k", "mu_capture", "mu_backoff",
-        "mu_search", "stabilize", "response", "epochs",
-    ),
-    donate_argnums=(0,),
-)
-def _sweep_fit_scan(
-    w,  # [D, p_max, q_max]
-    xs,  # [N, D, p_max] volleys (scan axis leading)
-    thresholds,  # [D]
-    t_maxes,  # [D]
-    q_actives,  # [D]
-    t_window: int,
-    w_max: int,
-    wta_k: int,
-    mu_capture: float,
-    mu_backoff: float,
-    mu_search: float,
-    stabilize: bool,
-    response: str,
-    epochs: int,
-):
-    """All designs x all epochs x all volleys in one compiled program."""
-
-    def volley(wc, xt):  # wc: [D, p, q]; xt: [D, p]
-        w2, _ = jax.vmap(
-            lambda wd, xd, th, tm, qa: fused_column.fused_step_ref(
-                wd, xd, th, t_window, w_max, wta_k, mu_capture, mu_backoff,
-                mu_search, stabilize, t_max=tm, response=response,
-                integer_fire=True, q_active=qa,
-            )
-        )(wc, xt, thresholds, t_maxes, q_actives)
-        return w2, None
-
-    def epoch(wc, _):
-        return jax.lax.scan(volley, wc, xs)
-
-    w, _ = jax.lax.scan(epoch, w, None, length=epochs)
-    return w
-
-
-@functools.partial(
-    jax.jit, static_argnames=("t_window", "wta_k", "response")
-)
-def _sweep_assign(
-    w, xs, thresholds, t_maxes, q_actives,
-    t_window: int, wta_k: int, response: str,
-):
-    """Cluster ids for every design: [N, D, p] -> [D, N]."""
-
-    def volley(_, xt):
-        def one(wd, xd, th, tm, qa):
-            t = fused_column.fire_dense_ref(
-                wd, xd, th, t_window, t_max=tm, response=response
-            )
-            qi = jnp.arange(wd.shape[1], dtype=TIME_DTYPE)
-            t = jnp.where(qi < qa, t, tm)
-            y = ref.wta_ref(t[None], wta_k, tm)[0]
-            spiked = (y < tm).any()
-            return jnp.where(spiked, jnp.argmin(y), qa).astype(TIME_DTYPE)
-
-        return 0, jax.vmap(one)(w, xt, thresholds, t_maxes, q_actives)
-
-    _, asg = jax.lax.scan(volley, 0, xs)  # [N, D]
-    return asg.T
-
-
 def cluster_time_series_many(
     series: np.ndarray,
     labels: Optional[np.ndarray],
@@ -253,7 +197,7 @@ def cluster_time_series_many(
     q_actives = jnp.asarray([c.q for c in cfgs], TIME_DTYPE)
 
     t0 = time.perf_counter()
-    w = _sweep_fit_scan(
+    w = fused_column.fit_scan_padded(
         w0, xs, thresholds, t_maxes, q_actives,
         t_window=t_window, w_max=c0.neuron.w_max, wta_k=c0.wta.k,
         mu_capture=c0.stdp.mu_capture, mu_backoff=c0.stdp.mu_backoff,
@@ -262,7 +206,7 @@ def cluster_time_series_many(
         response=c0.neuron.response, epochs=epochs,
     )
     asg = np.asarray(
-        _sweep_assign(
+        fused_column.assign_padded(
             w, xs, thresholds, t_maxes, q_actives,
             t_window=t_window, wta_k=c0.wta.k,
             response=c0.neuron.response,
@@ -280,3 +224,53 @@ def cluster_time_series_many(
             ClusteringResult(asg[i], ri, params, train_seconds, "pallas")
         )
     return results
+
+
+# --------------------------------------------------- multi-layer networks
+def cluster_time_series_network(
+    series: np.ndarray,
+    labels: Optional[np.ndarray],
+    cfg: NetworkConfig,
+    epochs: int = 8,
+    mode: str = "auto",
+    seed: int = 0,
+    encoder: str = "latency",
+) -> ClusteringResult:
+    """End-to-end clustering with a multi-layer TNN design.
+
+    Same loop as ``cluster_time_series`` — encode -> greedy layer-wise
+    online STDP -> assign clusters -> rand index — but the design is a
+    ``NetworkConfig``: layer l's post-WTA volleys feed layer l+1, each layer
+    trains as ONE jitted donated scan on the backend ``mode`` resolves to
+    (see ``network.fit_greedy``), and the cluster id of a volley is the
+    winner index in the final layer's concatenated output (out_width ==
+    the 'unclustered' bucket).
+
+    The encoded width must match layer 0's connectivity plan
+    (``network.validate``); ``cfg.layers[0]`` fixes the encoder geometry the
+    way ``cfg.p`` does for single columns.
+    """
+    from repro.clustering.metrics import rand_index as rand_index_fn
+    from repro.core import network as network_lib
+
+    volleys = _encode_width(
+        jnp.asarray(series), cfg.layers[0].column.t_max,
+        network_lib.in_width(cfg), encoder,
+    )
+    rng = jax.random.key(seed)
+    rng, init_key = jax.random.split(rng)
+    params = network_lib.init_params(init_key, cfg, volleys.shape[-1])
+
+    t0 = time.perf_counter()
+    params = network_lib.fit_greedy(
+        params, volleys, cfg, epochs=epochs, mode=mode, rng=rng
+    )
+    assignments = np.asarray(
+        network_lib.cluster_assignments(params, volleys, cfg, mode)
+    )
+    train_seconds = time.perf_counter() - t0
+
+    ri = float("nan")
+    if labels is not None:
+        ri = float(rand_index_fn(np.asarray(labels), assignments))
+    return ClusteringResult(assignments, ri, params, train_seconds, mode)

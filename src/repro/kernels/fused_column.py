@@ -351,6 +351,93 @@ def _fused_fit_scan(
     return w, ys
 
 
+# ----------------------------------------------------- padded envelope scan
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "t_window", "w_max", "wta_k", "mu_capture", "mu_backoff",
+        "mu_search", "stabilize", "response", "epochs",
+    ),
+    donate_argnums=(0,),
+)
+def fit_scan_padded(
+    w,  # [D, p_pad, q_pad]
+    xs,  # [N, D, p_pad] volleys (scan axis leading; padding silent >= t_window)
+    thresholds,  # [D]
+    t_maxes,  # [D]
+    q_actives,  # [D]
+    t_window: int,
+    w_max: int,
+    wta_k: int,
+    mu_capture: float,
+    mu_backoff: float,
+    mu_search: float,
+    stabilize: bool,
+    response: str,
+    epochs: int,
+):
+    """All designs x all epochs x all volleys in ONE compiled program.
+
+    The padding-envelope contract: every member design is padded into a
+    shared (p_pad, q_pad, t_window) envelope, its per-design threshold /
+    effective window / live-neuron count become *traced* scalars, and the
+    fused column step is ``vmap``-ed over the leading design axis.  Callers
+    with the same envelope shapes and static hyper-parameters share one
+    compiled trace — this is what lets a heterogeneous design sweep
+    (``simulator.cluster_time_series_many``) and heterogeneous network
+    layers (``network.fit_greedy``) reuse each other's compilations.
+
+    ``w`` is donated: the weight buffer stays resident across the whole
+    epochs x volleys scan.
+    """
+
+    def volley(wc, xt):  # wc: [D, p, q]; xt: [D, p]
+        w2, _ = jax.vmap(
+            lambda wd, xd, th, tm, qa: fused_step_ref(
+                wd, xd, th, t_window, w_max, wta_k, mu_capture, mu_backoff,
+                mu_search, stabilize, t_max=tm, response=response,
+                integer_fire=True, q_active=qa,
+            )
+        )(wc, xt, thresholds, t_maxes, q_actives)
+        return w2, None
+
+    def epoch(wc, _):
+        return jax.lax.scan(volley, wc, xs)
+
+    w, _ = jax.lax.scan(epoch, w, None, length=epochs)
+    return w
+
+
+@functools.partial(
+    jax.jit, static_argnames=("t_window", "wta_k", "response")
+)
+def assign_padded(
+    w, xs, thresholds, t_maxes, q_actives,
+    t_window: int, wta_k: int, response: str,
+):
+    """Cluster ids for every padded design: [N, D, p_pad] -> [D, N].
+
+    Same envelope contract as ``fit_scan_padded``; the id of a volley is the
+    winner neuron index, or the design's live-neuron count ``q_active`` when
+    no neuron spikes (the 'unclustered' bucket)."""
+
+    def volley(_, xt):
+        def one(wd, xd, th, tm, qa):
+            t = fire_dense_ref(
+                wd, xd, th, t_window, t_max=tm, response=response
+            )
+            qi = jnp.arange(wd.shape[1], dtype=TIME_DTYPE)
+            t = jnp.where(qi < qa, t, tm)
+            y = ref.wta_ref(t[None], wta_k, tm)[0]
+            spiked = (y < tm).any()
+            return jnp.where(spiked, jnp.argmin(y), qa).astype(TIME_DTYPE)
+
+        return 0, jax.vmap(one)(w, xt, thresholds, t_maxes, q_actives)
+
+    _, asg = jax.lax.scan(volley, 0, xs)  # [N, D]
+    return asg.T
+
+
 def fit_fused(
     params: dict,
     x: jnp.ndarray,
