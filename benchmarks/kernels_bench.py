@@ -11,12 +11,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_call
+from repro.core import backend
 from repro.core.types import ColumnConfig, NeuronConfig
 from repro.kernels import fused_column, ref
 from repro.kernels.rnl_response import rnl_fire_pallas
 
 CASES = [(64, 65, 2, 64), (64, 270, 25, 64), (16, 637, 2, 256)]
 FUSED_CASES = [(65, 2, 64), (470, 5, 64)]  # one fused train-step per volley
+# padded heterogeneous batch: D designs, one kernel launch, runtime operands
+PADDED_CASES = [(4, 128, 8, 64), (7, 256, 16, 64)]  # (D, p_pad, q_pad, t_win)
 
 
 def run() -> list:
@@ -57,12 +60,53 @@ def run() -> list:
             )
             jax.block_until_ready(out["w"])
 
-        kernel_lowering = "mosaic" if jax.default_backend() == "tpu" else "interpret"
+        kernel_lowering = "mosaic" if backend.on_tpu() else "interpret"
         us_k = time_call(k_fused, kernel_lowering)
         us_r = time_call(k_fused, "reference")
         mxu_flops = 2 * 8 * 8 * p * q * t_max  # planes x volleys
         rows.append({
             "case": f"fused_step_p{p}_q{q}_t{t_max}",
+            "pallas_us": us_k, "ref_us": us_r, "mxu_flops": mxu_flops,
+        })
+
+    # padded heterogeneous batch: D designs with mixed runtime operands
+    # (threshold / t_max / live-q in SMEM) through ONE kernel launch vs the
+    # vmapped jnp reference body of the same step.
+    for d, p_pad, q_pad, t_win in PADDED_CASES:
+        w = jnp.asarray(rng.integers(0, 8, (d, p_pad, q_pad)), jnp.float32)
+        t_in = jnp.asarray(
+            rng.integers(0, t_win, (d, p_pad)), jnp.float32
+        )
+        thr = jnp.asarray(rng.uniform(4.0, p_pad, d), jnp.float32)
+        t_maxes = jnp.asarray(rng.integers(t_win // 2, t_win + 1, d), jnp.float32)
+        q_act = jnp.asarray(rng.integers(2, q_pad + 1, d), jnp.float32)
+        operands = fused_column.design_operands(
+            thr, t_maxes, q_act, 1.0, 1.0, 1.0
+        )
+
+        def k_padded():
+            out, _ = fused_column.fused_step_pallas_padded(
+                w, t_in, operands, t_window=t_win, w_max=7, wta_k=1,
+                stabilize=False,
+                interpret=backend.pallas_interpret(),
+            )
+            jax.block_until_ready(out)
+
+        def k_padded_ref():
+            out, _ = jax.vmap(
+                lambda wd, xd, th, tm, qa: fused_column.fused_step_ref(
+                    wd, xd, th, t_win, 7, 1, 1.0, 1.0, 1.0, False,
+                    t_max=tm, response="rnl", integer_fire=True, q_active=qa,
+                )
+            )(w, t_in.astype(jnp.int32), thr, t_maxes.astype(jnp.int32),
+              q_act.astype(jnp.int32))
+            jax.block_until_ready(out)
+
+        us_k = time_call(k_padded)
+        us_r = time_call(k_padded_ref)
+        mxu_flops = 2 * 8 * d * p_pad * q_pad * t_win  # planes x designs
+        rows.append({
+            "case": f"padded_step_d{d}_p{p_pad}_q{q_pad}_t{t_win}",
             "pallas_us": us_k, "ref_us": us_r, "mxu_flops": mxu_flops,
         })
     return rows

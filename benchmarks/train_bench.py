@@ -2,11 +2,14 @@
 
 Times the fused single-scan training path (one jitted, donated lax.scan over
 epochs x volleys, fused fire+WTA+STDP body) against the legacy per-epoch
-loop, on paper column geometries AND a multi-layer network (the ISSUE 2
+loop, on paper column geometries, a padded heterogeneous design sweep (the
+ISSUE 3 tentpole: ONE ``fit_scan_padded`` program with runtime design
+operands vs one fused fit per design) AND a multi-layer network (the ISSUE 2
 tentpole: ``network.fit_greedy`` as one jitted padded scan per layer vs the
 untraced per-epoch Python loop it replaced).  Emits ``BENCH_train.json``
-(us/volley + MXU FLOPs of the fused kernel algebra) so the perf trajectory
-is tracked PR over PR; later PRs append comparable numbers.
+(us/volley + MXU FLOPs of the fused kernel algebra) so the perf trajectory —
+including the reference-vs-kernel gap on the padded path (the 'lowering'
+column) — is tracked PR over PR; later PRs append comparable numbers.
 
 MXU FLOPs count the one-hot plane matmuls of the fused Pallas kernel
 (2 * (w_max+1) * p * q * t_max per volley) — the work the TPU lowering puts
@@ -17,6 +20,7 @@ from __future__ import annotations
 
 import json
 import pathlib
+import time
 
 import jax
 import jax.numpy as jnp
@@ -25,8 +29,9 @@ import numpy as np
 from benchmarks.common import emit, time_call
 from repro.core import backend, column, network
 from repro.core.types import (
-    ColumnConfig, LayerConfig, NetworkConfig, NeuronConfig,
+    ColumnConfig, LayerConfig, NetworkConfig, NeuronConfig, TIME_DTYPE,
 )
+from repro.kernels import fused_column
 
 # (name, B volleys, p, q, t_max) — Beef-shaped default plus small/large cols
 CASES = [
@@ -75,6 +80,98 @@ def run() -> list:
             "mxu_flops_per_volley": mxu_flops,
         })
     return rows
+
+
+# ------------------------------------------------------- padded design sweep
+SWEEP_B = 64  # volleys per epoch
+# heterogeneous candidates sharing one envelope: (q, t_max) per design,
+# p pinned by the stream as in simulator.cluster_time_series_many
+SWEEP_P = 96
+SWEEP_DESIGNS = [(5, 32), (5, 64), (10, 32), (10, 64)]
+
+
+def run_sweep() -> dict:
+    """Padded heterogeneous design sweep: ONE fit_scan_padded program
+    (runtime design operands, one trace for the whole batch) vs the legacy
+    per-design loop (one fused fit per design, D separate compilations).
+    The reference-vs-kernel gap on this path is tracked by the 'lowering'
+    column: 'reference' off-TPU, 'mosaic' on TPU."""
+    rng = np.random.default_rng(2)
+    d = len(SWEEP_DESIGNS)
+    cfgs = [
+        ColumnConfig(
+            p=SWEEP_P, q=q, t_max=t_max,
+            neuron=NeuronConfig(threshold=SWEEP_P * 7 / 8.0),
+        )
+        for q, t_max in SWEEP_DESIGNS
+    ]
+    c0 = cfgs[0]
+    q_pad = max(c.q for c in cfgs)
+    t_window = max(c.t_max for c in cfgs)
+    lowering = backend.padded_lowering(c0.neuron.response)
+
+    w0 = np.zeros((d, SWEEP_P, q_pad), np.float32)
+    for i, c in enumerate(cfgs):
+        w0[i, :, : c.q] = rng.integers(0, 8, (SWEEP_P, c.q))
+    x = rng.integers(0, min(c.t_max for c in cfgs), (SWEEP_B, SWEEP_P))
+    xs = jnp.asarray(
+        np.broadcast_to(x[:, None, :], (SWEEP_B, d, SWEEP_P)), TIME_DTYPE
+    )
+    thresholds = jnp.asarray([c.neuron.threshold for c in cfgs], jnp.float32)
+    t_maxes = jnp.asarray([c.t_max for c in cfgs], TIME_DTYPE)
+    q_actives = jnp.asarray([c.q for c in cfgs], TIME_DTYPE)
+
+    def padded():
+        w = fused_column.fit_scan_padded(
+            jnp.asarray(w0), xs, thresholds, t_maxes, q_actives,
+            t_window=t_window, w_max=c0.neuron.w_max, wta_k=c0.wta.k,
+            mu_capture=c0.stdp.mu_capture, mu_backoff=c0.stdp.mu_backoff,
+            mu_search=c0.stdp.mu_search,
+            stabilize=c0.stdp.stabilizer == "half",
+            response=c0.neuron.response, epochs=EPOCHS, lowering=lowering,
+        )
+        jax.block_until_ready(w)
+
+    def legacy():
+        # per-design fused fits on the SAME engine the padded path uses
+        # (kernel on TPU, reference off-TPU): D traces, no shared envelope,
+        # so the row isolates one-trace-vs-D-traces + padding waste.
+        xj = jnp.asarray(x, TIME_DTYPE)
+        for i, c in enumerate(cfgs):
+            p2, _ = fused_column.fit_fused(
+                {"w": jnp.asarray(w0[i, :, : c.q])}, xj, c, epochs=EPOCHS,
+                lowering=lowering,
+            )
+            jax.block_until_ready(p2["w"])
+
+    # cold first calls: the padded program compiles ONE trace for the whole
+    # heterogeneous batch (runtime design operands), the legacy loop one
+    # trace per design — the compilation cliff this path removes.
+    t0 = time.perf_counter()
+    padded()
+    cold_padded_us = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    legacy()
+    cold_legacy_us = (time.perf_counter() - t0) * 1e6
+
+    us_padded = time_call(padded)
+    us_legacy = time_call(legacy)
+    volleys = EPOCHS * SWEEP_B * d
+    mxu_flops = sum(
+        2 * (c.neuron.w_max + 1) * c.p * c.q * c.t_max for c in cfgs
+    ) // d
+    return {
+        "case": f"sweep{d}x{SWEEP_P}p",
+        "backend": "pallas",
+        "lowering": lowering,
+        "fused_us_per_volley": us_padded / volleys,
+        "legacy_us_per_volley": us_legacy / volleys,
+        "speedup": us_legacy / max(us_padded, 1e-9),
+        "cold_speedup": cold_legacy_us / max(cold_padded_us, 1e-9),
+        "traces": 1,
+        "legacy_traces": d,
+        "mxu_flops_per_volley": mxu_flops,
+    }
 
 
 # ---------------------------------------------------- multi-layer network
@@ -158,9 +255,11 @@ def run_network() -> dict:
         "backend": backend.resolve(
             "auto", net.layers[0].column, training=True
         ),
-        # the padded per-layer scan runs the reference lowering of the
-        # fused algebra on every host (traced per-layer scalars)
-        "lowering": "reference",
+        # the padded per-layer scan lowers through backend.padded_lowering:
+        # Mosaic kernel on TPU (runtime design operands), reference off-TPU
+        "lowering": backend.padded_lowering(
+            net.layers[0].column.neuron.response
+        ),
         "fused_us_per_volley": us_fused / volleys,
         "legacy_us_per_volley": us_legacy / volleys,
         "speedup": us_legacy / max(us_fused, 1e-9),
@@ -170,6 +269,7 @@ def run_network() -> dict:
 
 def main(argv=None) -> None:
     rows = run()
+    rows.append(run_sweep())
     rows.append(run_network())
     print("\n# Fused online-STDP training vs legacy per-epoch loop")
     print("| case | backend | fused us/volley | legacy us/volley | speedup | MXU flops/volley |")

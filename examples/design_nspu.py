@@ -32,8 +32,10 @@ L, k = ds.x.shape[1], ds.n_classes
 fc = PaperForecaster()
 
 # All candidate designs are padded into one (p, q, t_max) envelope and
-# trained as ONE compiled program (vmap over the design axis) — the batched
-# sweep the functional simulator exists for.
+# trained as ONE compiled program — per-design threshold/window/live-q ride
+# as runtime operands, so the whole heterogeneous sweep is one trace (the
+# Mosaic kernel on TPU, its jnp reference body elsewhere; the result
+# records which lowering actually ran on this host).
 cfgs = []
 for q in (k, 2 * k):
     for t_max in (32, 64):
@@ -41,7 +43,8 @@ for q in (k, 2 * k):
         cfgs.append(cfg.with_threshold(simulator.suggest_threshold(cfg)))
 sweep = simulator.cluster_time_series_many(ds.x[:120], ds.y[:120], cfgs, epochs=3)
 print(f"swept {len(cfgs)} designs in one compiled program "
-      f"({sweep[0].train_seconds:.2f}s total)")
+      f"({sweep[0].train_seconds:.2f}s total, "
+      f"lowering={sweep[0].lowering!r})")
 
 candidates = []
 for cfg, res in zip(cfgs, sweep):
@@ -76,7 +79,8 @@ net_res = simulator.cluster_time_series_network(
 net_syn = sum(l.columns * l.column.p * l.column.q for l in net.layers)
 print(f"2-layer variant ({net_syn} synapses): RI={net_res.rand_index:.3f} "
       f"vs best single column RI={best['ri']:.3f} "
-      f"({net_res.train_seconds:.2f}s, one fused scan per layer)")
+      f"({net_res.train_seconds:.2f}s, one fused scan per layer, "
+      f"lowering={net_res.lowering!r})")
 
 with tempfile.TemporaryDirectory() as build:
     spec = ColumnSpec(name="beef_nspu", p=L, q=best["q"],

@@ -15,12 +15,15 @@ policy now lives here:
   (online STDP training as ONE jitted, donated lax.scan over epochs x
   volleys — a single compilation per config, no per-epoch dispatch).
 
-* **Lowering policy** — ``pallas_interpret()`` / ``pallas_lowering()`` are
-  the ONE place that inspects ``jax.default_backend()``.  On TPU the fused
-  step compiles through Mosaic; elsewhere it lowers to the pure-jnp
-  reference body (same algebra, same results) because the Pallas
-  interpreter is a validation tool, not an execution engine.  Pass
-  ``lowering='interpret'`` explicitly to validate the kernel off-TPU.
+* **Lowering policy** — ``pallas_interpret()`` / ``pallas_lowering()`` /
+  ``padded_lowering()`` are the ONE place that inspects
+  ``jax.default_backend()``.  On TPU the fused step compiles through Mosaic
+  — including the padded-envelope scans (design sweep, network layers),
+  whose per-design scalars are runtime SMEM operands of the kernel;
+  elsewhere it lowers to the pure-jnp reference body (same algebra, same
+  results) because the Pallas interpreter is a validation tool, not an
+  execution engine.  Pass ``lowering='interpret'`` explicitly to validate
+  the kernel off-TPU.
 
 * **Resolution** — ``resolve(mode, cfg, training=...)`` maps the public
   ``mode`` knob ('auto' | 'event' | 'cycle' | 'pallas') to a registry name.
@@ -64,6 +67,26 @@ def pallas_lowering() -> str:
     the same fused step; the interpreter is only ever chosen explicitly.
     """
     return "mosaic" if on_tpu() else "reference"
+
+
+def padded_lowering(response: str) -> str:
+    """Response-aware lowering for the fused (padded-kernel) paths.
+
+    The Mosaic kernel takes the per-design scalars (threshold, t_max,
+    live q, STDP mus) as runtime SMEM operands, so padded heterogeneous
+    batches — the design sweep and network layer training — run the real
+    kernel on TPU; single-column 'pallas' entry points resolve here too
+    (they are the D=1 slice of the same kernel).  The kernel implements
+    the RNL plane decomposition only; SNL lowers to the reference body of
+    the same algebra everywhere (bit-identical on integer weight grids, so
+    this is a lowering choice, not a semantic switch).  The interpreter is
+    never chosen here — validation passes ``lowering='interpret'``
+    explicitly.
+    """
+    low = pallas_lowering()
+    if response in fused_column.fire_responses(low):
+        return low
+    return "reference"
 
 
 # ------------------------------------------------------------- generic fit
@@ -184,17 +207,23 @@ def _solver_fire(mode: str):
 
 # -------------------------------------------------------------- pallas side
 def _pallas_fire(params, x, cfg: ColumnConfig, rng=None):
-    """Kernel-backed batched forward: integer-grid fire + WTA."""
+    """Kernel-backed batched forward: integer-grid fire + WTA.
+
+    Response-aware like the fused fit paths: RNL uses the kernel where one
+    exists, SNL falls to the reference body of the same algebra (a
+    lowering choice), anything else (LIF) raises.
+    """
     from repro.kernels import ops  # late import: ops depends on this module
 
-    allowed = fused_column.fire_responses(pallas_lowering())
+    allowed = fused_column.fire_responses("reference")
     if cfg.neuron.response not in allowed:
         raise ValueError(
             f"pallas forward supports response {allowed}, got "
             f"{cfg.neuron.response!r}; use mode='cycle'"
         )
+    lowering = padded_lowering(cfg.neuron.response)
     w = jnp.round(jnp.clip(params["w"], 0.0, cfg.neuron.w_max))
-    if pallas_lowering() == "reference":
+    if lowering == "reference":
         # lax.map (not vmap): bounds the [p, q, t] dense transient to one
         # volley instead of materializing it for the whole batch.
         t = jax.lax.map(
@@ -227,7 +256,8 @@ def _pallas_fit(params, x, cfg, mode, epochs, rng, trace, y_target=None):
             params, x, cfg, fallback, epochs, rng, trace, y_target
         )
     return fused_column.fit_fused(
-        params, x, cfg, epochs, lowering=pallas_lowering(), trace=trace
+        params, x, cfg, epochs,
+        lowering=padded_lowering(cfg.neuron.response), trace=trace,
     )
 
 
@@ -286,10 +316,13 @@ register(Backend("pallas", _pallas_fire, _pallas_fit))
 
 
 def _fused_ok(cfg: ColumnConfig) -> bool:
-    # Evaluated against the STRICTEST lowering ('mosaic', RNL-only), not the
-    # host's, so 'auto' resolves identically on every backend — otherwise an
-    # SNL config would train fused (integer-grid fire) on CPU but fall back
-    # to the float-weight event solver on TPU, seed-for-seed irreproducible.
+    # Evaluated against the STRICTEST lowering ('mosaic', RNL-only).  SNL
+    # *could* now train fused uniformly on every host (padded_lowering
+    # routes it to the reference body), but 'auto' has always trained SNL
+    # on the float-weight event solver, and the fused path's integer-grid
+    # fire gives different (not wrong, different) results — so routing SNL
+    # fused under 'auto' would silently change established results.  Users
+    # who want SNL on the fused path opt in with mode='pallas'.
     try:
         fused_column.check_fusable(cfg, "mosaic")
         return True

@@ -21,25 +21,25 @@ donated ``lax.scan``:
   ``repro.kernels.fused_column.fit_scan_padded`` — fused layers that can
   share a compiled step (same column count and static hyper-parameters,
   sizes within ``_ENVELOPE_WASTE_CAP`` of each other) are padded into one
-  (p, q, t_max) envelope and the fused column step is ``vmap``-ed over the
-  layer's columns axis, so heterogeneous layers reuse one compiled step
-  when close enough in size that padding compute stays bounded (at most
-  one compilation per distinct layer shape).
-  Like the design sweep, the padded scan runs the *reference lowering* of
-  the fused algebra on every host — its per-layer threshold/window/live-q
-  are traced scalars, which the Mosaic kernel (compile-time constants)
-  does not yet accept;
+  (p, q, t_max) envelope and the fused column step runs over the layer's
+  columns axis, so heterogeneous layers reuse one compiled step when close
+  enough in size that padding compute stays bounded (at most one
+  compilation per distinct layer shape).  The padded scan lowers through
+  ``backend.padded_lowering``: the Mosaic kernel on TPU (per-layer
+  threshold / window / live-q / STDP mus are runtime SMEM operands of one
+  static envelope), the jnp reference body of the same algebra elsewhere —
+  bit-identical on integer weight grids either way;
 * layers that resolve to 'event' / 'cycle' (LIF, stochastic STDP, random
   tie-break, ...) run the same solver volley body as ``column.fit``
   (``backend.solver_volley_step``) scanned over epochs x volleys and
   ``vmap``-ed over columns — one compilation per layer *config* (the
   solver scan specializes on the full column config, threshold included).
 
-Because the network fused path executes the reference lowering everywhere,
-an explicit ``mode='pallas'`` validates layers against the *reference*
-fused contract (RNL and SNL) uniformly on every host; single-column
-``fit`` instead validates against the host's lowering (RNL-only under
-Mosaic on TPU).
+An explicit ``mode='pallas'`` validates layers against the fused contract
+exactly like single-column ``fit``: RNL trains on the kernel wherever one
+exists; SNL layers are legal too and take the reference body of the same
+fused algebra on every host (``backend.padded_lowering`` picks the
+lowering, never the semantics).
 
 The greedy handoff (``apply`` of the frozen stack below) is jitted per
 layer as well; no Python-level per-epoch dispatch survives anywhere in
@@ -264,13 +264,15 @@ def _fit_layer_fused(
 
     Pads weights and volleys into the layer group's shared envelope and
     drives ``fused_column.fit_scan_padded`` with the layer's columns as the
-    vmapped design axis — the same machinery (and, for shape-compatible
-    layers, the same compiled step) as
-    ``simulator.cluster_time_series_many``.  The padded scan is the
-    reference lowering of the fused algebra on every host (see module
-    docstring), so fusability is checked against 'reference'.
+    design axis — the same machinery (and, for shape-compatible layers, the
+    same compiled step) as ``simulator.cluster_time_series_many``.  The
+    lowering comes from ``backend.padded_lowering``: the Mosaic kernel on
+    TPU (the layer's threshold / window / live-q / mus ride along as
+    runtime operands), the jnp reference body elsewhere — and fusability is
+    checked against that lowering.
     """
-    fused_column.check_fusable(cfg, "reference")
+    lowering = backend_lib.padded_lowering(cfg.neuron.response)
+    fused_column.check_fusable(cfg, lowering)
     c = w.shape[0]
     p_env, q_env, t_window = envelope
     w_pad = (
@@ -290,7 +292,7 @@ def _fit_layer_fused(
         mu_capture=cfg.stdp.mu_capture, mu_backoff=cfg.stdp.mu_backoff,
         mu_search=cfg.stdp.mu_search,
         stabilize=cfg.stdp.stabilizer == "half",
-        response=cfg.neuron.response, epochs=epochs,
+        response=cfg.neuron.response, epochs=epochs, lowering=lowering,
     )
     return w_new[:, : cfg.p, : cfg.q]
 
@@ -358,9 +360,23 @@ def fit_greedy(
 
     Per layer, the entire epochs x volleys loop is ONE jitted, donated
     ``lax.scan`` on the backend ``mode`` resolves to for that layer's column
-    config ('auto' prefers the fused path; see module docstring), and the
-    handoff forward of the frozen layer is one jitted call.  Layers sharing
-    a shape compile once; refitting recompiles nothing.
+    config, and the handoff forward of the frozen layer is one jitted call.
+    Layers sharing a shape compile once; refitting recompiles nothing.
+
+    Args:
+      mode: 'auto' | 'event' | 'cycle' | 'pallas', resolved *per layer*
+        through ``backend.resolve`` — 'auto' routes each layer to the fused
+        padded scan whenever its config fits the fused contract (RNL,
+        expected STDP, index tie-break) and to the event/cycle solvers
+        otherwise; explicit names force that backend for every layer and
+        raise on layers outside its contract.  Under 'pallas' the padded
+        scan lowers via ``backend.padded_lowering`` (Mosaic kernel on TPU,
+        reference body elsewhere).
+      rng: PRNG key.  Required whenever any layer's config is stochastic —
+        ``wta.tie_break == 'random'`` or ``stdp.mode == 'stochastic'`` —
+        and never silently defaulted for those (a loud ValueError instead);
+        deterministic configs may omit it.  Fused layers are deterministic
+        by contract and consume no randomness.
     """
     if rng is None:
         # mirror the single-column guards: never silently substitute a

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import backend as backend_lib
 from repro.core import column as column_lib
 from repro.core import encoding
 from repro.core.types import ColumnConfig, NetworkConfig, TIME_DTYPE
@@ -50,6 +51,12 @@ class ClusteringResult:
     params: dict
     train_seconds: float
     mode: str
+    # Lowering the fused training path actually ran on this host
+    # ('mosaic' | 'interpret' | 'reference'), '' when training resolved to
+    # the event/cycle solvers only, comma-joined when a network's fused
+    # layers mixed lowerings (e.g. 'mosaic,reference' for RNL + SNL layers
+    # on TPU).
+    lowering: str = ""
 
 
 def suggest_threshold(cfg: ColumnConfig) -> float:
@@ -99,9 +106,17 @@ def cluster_time_series(
       labels: [N] integer class labels, or None (rand_index = nan).
       cfg: column config (p x q).
       epochs: STDP passes over the data.
-      mode: simulation backend (see module docstring).
-      seed: PRNG seed.
+      mode: simulation backend, resolved by ``backend.resolve`` (see module
+        docstring); forcing 'pallas' on a config outside the fused contract
+        raises rather than silently switching semantics.
+      seed: PRNG seed — the one source of randomness (weight init, plus the
+        per-volley keys stochastic/random configs consume); equal seeds
+        reproduce the run exactly on every host.
       encoder: 'latency' or 'onoff'.
+
+    The returned ``ClusteringResult.lowering`` records which lowering of the
+    fused algebra training actually ran ('mosaic' on TPU, 'reference'
+    elsewhere), or '' when it trained on the event/cycle solvers.
     """
     from repro.clustering.metrics import rand_index as rand_index_fn
 
@@ -120,7 +135,15 @@ def cluster_time_series(
     ri = float("nan")
     if labels is not None:
         ri = float(rand_index_fn(np.asarray(labels), assignments))
-    return ClusteringResult(assignments, ri, params, train_seconds, mode)
+    resolved = backend_lib.resolve(mode, cfg, training=True)
+    lowering = (
+        backend_lib.padded_lowering(cfg.neuron.response)
+        if resolved == "pallas"
+        else ""
+    )
+    return ClusteringResult(
+        assignments, ri, params, train_seconds, mode, lowering
+    )
 
 
 # --------------------------------------------------- batched design sweep
@@ -136,9 +159,18 @@ def cluster_time_series_many(
 
     Every design is padded into the shared (max p, max q, max t_max)
     envelope; per-design threshold / window / live-neuron count become
-    traced scalars, and the fused training step is ``vmap``-ed over the
-    design axis — the whole sweep is a single jitted scan (plus one more for
-    assignments), compiled once.
+    traced scalars — runtime SMEM operands of the Mosaic kernel on TPU,
+    ``vmap``-ed operands of the reference body elsewhere
+    (``backend.padded_lowering`` picks) — and the whole sweep is a single
+    jitted scan (plus one more for assignments), compiled ONCE per envelope
+    shape, never per design.
+
+    This front-end always trains on the fused path (there is no ``mode``
+    knob): every design must fit the fused contract — expected-mode STDP,
+    index tie-break WTA, and a response the selected lowering supports —
+    or the sweep raises up front.  The fused path is deterministic, so
+    ``seed`` only feeds weight initialization; equal seeds reproduce the
+    sweep bit-for-bit on every host.
 
     Designs must share the response function, STDP rule, WTA config and
     w_max (they are compile-time constants of the fused step); q, t_max and
@@ -147,7 +179,7 @@ def cluster_time_series_many(
     of them (the padding machinery itself handles unequal p, should a
     future per-design front-end need it).  ``train_seconds`` on every
     result is the wall time of the whole batched sweep, not a per-design
-    share.
+    share; ``lowering`` records the lowering that actually ran.
 
     Returns one ClusteringResult per config, in input order.
     """
@@ -156,8 +188,9 @@ def cluster_time_series_many(
     if not cfgs:
         return []
     c0 = cfgs[0]
+    lowering = backend_lib.padded_lowering(c0.neuron.response)
     for c in cfgs:
-        fused_column.check_fusable(c, "reference")
+        fused_column.check_fusable(c, lowering)
         same = (
             c.neuron.response == c0.neuron.response
             and c.neuron.w_max == c0.neuron.w_max
@@ -203,7 +236,7 @@ def cluster_time_series_many(
         mu_capture=c0.stdp.mu_capture, mu_backoff=c0.stdp.mu_backoff,
         mu_search=c0.stdp.mu_search,
         stabilize=c0.stdp.stabilizer == "half",
-        response=c0.neuron.response, epochs=epochs,
+        response=c0.neuron.response, epochs=epochs, lowering=lowering,
     )
     asg = np.asarray(
         fused_column.assign_padded(
@@ -221,7 +254,9 @@ def cluster_time_series_many(
             ri = float(rand_index_fn(np.asarray(labels), asg[i]))
         params = {"w": jnp.asarray(w[i, : c.p, : c.q])}
         results.append(
-            ClusteringResult(asg[i], ri, params, train_seconds, "pallas")
+            ClusteringResult(
+                asg[i], ri, params, train_seconds, "pallas", lowering
+            )
         )
     return results
 
@@ -245,6 +280,13 @@ def cluster_time_series_network(
     (see ``network.fit_greedy``), and the cluster id of a volley is the
     winner index in the final layer's concatenated output (out_width ==
     the 'unclustered' bucket).
+
+    ``mode`` is resolved per layer (same knob semantics as
+    ``network.fit_greedy``); fused layers run the lowering
+    ``backend.padded_lowering`` selects, recorded on the result.  ``seed``
+    derives both the weight init and the training key handed to
+    ``fit_greedy``, so stochastic layer configs are always legally keyed
+    here and equal seeds reproduce the run exactly.
 
     The encoded width must match layer 0's connectivity plan
     (``network.validate``); ``cfg.layers[0]`` fixes the encoder geometry the
@@ -273,4 +315,13 @@ def cluster_time_series_network(
     ri = float("nan")
     if labels is not None:
         ri = float(rand_index_fn(np.asarray(labels), assignments))
-    return ClusteringResult(assignments, ri, params, train_seconds, mode)
+    lows = {
+        backend_lib.padded_lowering(layer.column.neuron.response)
+        for layer in cfg.layers
+        if backend_lib.resolve(mode, layer.column, training=True) == "pallas"
+    }
+    # '' when no layer trained fused; comma-joined when fused layers mixed
+    # lowerings (e.g. RNL on the Mosaic kernel + SNL on the reference body)
+    return ClusteringResult(
+        assignments, ri, params, train_seconds, mode, ",".join(sorted(lows))
+    )

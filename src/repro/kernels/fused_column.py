@@ -5,14 +5,18 @@ online STDP folds one volley at a time into the weights, so training is a
 ``lax.scan`` over epochs x volleys whose body is ONE fused column step.  The
 step exists in two lowerings behind the same semantics:
 
-* ``_fused_step_pallas`` — a single ``pl.pallas_call``: the RNL body
-  potential is evaluated via the one-hot weight-plane decomposition
-  (MXU matmuls, planes built *in-kernel* from the VMEM-resident weights —
-  ``make_weight_planes`` never runs per volley), firing times fall out as
-  sub-threshold cycle counts, the k-WTA priority encoder and the per-synapse
-  expected-STDP update run in the same kernel invocation, and the updated
-  weights are written back.  Weights stay padded/resident across the whole
-  scan; padding happens once per ``fit``.
+* ``fused_step_pallas_padded`` — a single ``pl.pallas_call`` over a grid of
+  (designs, time blocks): the RNL body potential is evaluated via the
+  one-hot weight-plane decomposition (MXU matmuls, planes built *in-kernel*
+  from the VMEM-resident weights — ``make_weight_planes`` never runs per
+  volley), firing times fall out as sub-threshold cycle counts, the k-WTA
+  priority encoder and the per-synapse expected-STDP update run in the same
+  kernel invocation, and the updated weights are written back.  Per-design
+  scalars (threshold, effective ``t_max``, live-neuron count, STDP mus)
+  enter as a *runtime* SMEM operand (``design_operands``) masked against a
+  single static envelope — one compiled kernel serves a whole heterogeneous
+  design batch, and changing a threshold never retraces.  Weights stay
+  padded/resident across the whole scan; padding happens once per ``fit``.
 * ``fused_step_ref`` — the pure-jnp lowering of the same algebra (dense
   sub-threshold count over the time window).  Exact for RNL/SNL: V(t) is
   nondecreasing, so the count of sub-threshold integer cycles *is* the first
@@ -26,9 +30,12 @@ Scope (enforced by ``check_fusable``): ``response in ('rnl', 'snl')``
 tie-break WTA.  Other configs take the generic per-solver scan in
 ``repro.core.backend``.
 
-The per-design quantities (threshold, t_max, active q) are traced values in
-the reference lowering, so a stacked sweep of designs can ``vmap`` over them
-— see ``repro.core.simulator.cluster_time_series_many``.
+The per-design quantities (threshold, t_max, active q, STDP mus) are traced
+values in *both* lowerings — the reference ``vmap``s over them, the kernel
+reads them from SMEM — so a stacked sweep of heterogeneous designs
+(``simulator.cluster_time_series_many``) or network layers
+(``network.fit_greedy``) compiles once per envelope shape, never per
+design.  The full kernel contract is documented in ``docs/kernels.md``.
 """
 from __future__ import annotations
 
@@ -37,6 +44,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.types import ColumnConfig, TIME_DTYPE
 from repro.kernels import ref
@@ -46,9 +54,27 @@ SUBLANE = 8
 
 LOWERINGS = ("mosaic", "interpret", "reference")
 
+# Columns of the runtime design-operand array (see ``design_operands``):
+# one row of per-design scalars the kernel reads from SMEM at run time.
+OPERAND_COLS = (
+    "threshold", "t_max", "q_active", "mu_capture", "mu_backoff", "mu_search"
+)
+N_OPERANDS = len(OPERAND_COLS)
+
 
 def _pad_to(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
+
+
+def _pad_volleys_silent(x: jnp.ndarray, p_pad: int, sentinel: float):
+    """Widen volleys [..., p] -> [..., p_pad] f32, padding with ``sentinel``.
+
+    The kernel's silence contract is ``time >= design t_max`` (see
+    docs/kernels.md); any sentinel satisfying that for every design in the
+    batch is equivalent — this helper is the one place the fill happens.
+    """
+    xs = jnp.full(x.shape[:-1] + (p_pad,), float(sentinel), jnp.float32)
+    return xs.at[..., : x.shape[-1]].set(x.astype(jnp.float32))
 
 
 def fire_responses(lowering: str) -> tuple[str, ...]:
@@ -153,27 +179,67 @@ def fused_step_ref(
 
 
 # ------------------------------------------------------------ pallas kernel
+def design_operands(
+    thresholds,
+    t_maxes,
+    q_actives,
+    mu_capture,
+    mu_backoff,
+    mu_search,
+) -> jnp.ndarray:
+    """Pack per-design runtime scalars into the kernel's SMEM operand array.
+
+    Returns [D, N_OPERANDS] f32, one row per design, columns ordered as
+    ``OPERAND_COLS``.  Every entry is a *runtime* value: the kernel masks
+    against them inside one static envelope, so heterogeneous designs share
+    a single compiled kernel and changing any of them never retraces.  The
+    mus may be Python floats (broadcast across designs) or [D] arrays.
+    """
+    d = jnp.shape(thresholds)[0]
+    cols = (thresholds, t_maxes, q_actives, mu_capture, mu_backoff, mu_search)
+    return jnp.stack(
+        [
+            jnp.broadcast_to(jnp.asarray(c, jnp.float32), (d,))
+            for c in cols
+        ],
+        axis=1,
+    )
+
+
 def _fused_kernel(
-    t_ref,  # [1, p_pad]      f32 input volley (silent >= 2 * T_pad)
-    w_ref,  # [p_pad, q_pad]  f32 resident weights
-    w_out,  # [p_pad, q_pad]  f32 updated weights
-    y_out,  # [1, q_pad]      f32 counts accumulator -> winner times
+    scal_ref,  # [D, N_OPERANDS] f32 SMEM runtime design operands
+    t_ref,  # [1, p_pad]         f32 input volley (silent >= design t_max)
+    w_ref,  # [1, p_pad, q_pad]  f32 resident weights
+    w_out,  # [1, p_pad, q_pad]  f32 updated weights
+    y_out,  # [1, q_pad]         f32 counts accumulator -> winner times
     *,
     t_blk: int,
-    t_max: int,
-    q: int,
+    t_window: int,
     n_planes: int,
-    threshold: float,
     wta_k: int,
-    mu_capture: float,
-    mu_backoff: float,
-    mu_search: float,
     w_max: int,
     stabilize: bool,
 ):
-    p_pad, q_pad = w_ref.shape
-    i = pl.program_id(0)
-    last = pl.num_programs(0) - 1
+    """Fused fire + k-WTA + expected-STDP body, grid = (designs, time blocks).
+
+    Static envelope: block shapes, ``t_window`` (padded evaluation length),
+    ``n_planes``/``w_max``, ``wta_k`` and the stabilizer flag.  Everything
+    per-design — threshold, effective window ``t_max``, live-neuron count
+    ``q_active``, STDP mus — is read from ``scal_ref`` at run time and
+    masked against the envelope, so one compiled kernel serves a whole
+    heterogeneous design batch.
+    """
+    _, p_pad, q_pad = w_ref.shape
+    d = pl.program_id(0)
+    i = pl.program_id(1)
+    last = pl.num_programs(1) - 1
+
+    threshold = scal_ref[d, 0]
+    t_max = scal_ref[d, 1]
+    q_live = scal_ref[d, 2]
+    mu_capture = scal_ref[d, 3]
+    mu_backoff = scal_ref[d, 4]
+    mu_search = scal_ref[d, 5]
 
     @pl.when(i == 0)
     def _init():
@@ -186,7 +252,7 @@ def _fused_kernel(
     a = jnp.maximum(tv - ti, 0.0)  # [p_pad, t_blk] ramps
     base = jnp.sum(a, axis=0, keepdims=True)  # [1, t_blk]
 
-    w = w_ref[...]
+    w = w_ref[0]
     wi = jnp.round(jnp.clip(w, 0.0, float(w_max)))  # integer fire grid
     acc = jnp.zeros((q_pad, t_blk), jnp.float32)
     for v in range(n_planes):  # static unroll: planes from resident weights
@@ -197,7 +263,7 @@ def _fused_kernel(
             preferred_element_type=jnp.float32,
         )  # [q_pad, t_blk]
     vqt = base - acc  # [q_pad, t_blk] body potential
-    below = (vqt < threshold) & (tv < float(t_max))  # mask window padding
+    below = (vqt < threshold) & (tv < t_max)  # mask window padding
     y_out[...] += jnp.sum(below.astype(jnp.float32), axis=1)[None, :]
 
     # --- WTA + STDP once all time blocks have accumulated.
@@ -205,27 +271,29 @@ def _fused_kernel(
     def _finalize():
         counts = y_out[...]  # [1, q_pad]
         qi = jax.lax.broadcasted_iota(jnp.float32, (1, q_pad), 1)
-        t_fire = jnp.minimum(counts, float(t_max))
-        t_fire = jnp.where(qi < float(q), t_fire, float(t_max))  # pad neurons
+        t_fire = jnp.minimum(counts, t_max)
+        t_fire = jnp.where(qi < q_live, t_fire, t_max)  # pad neurons silent
 
         # k-WTA priority encoder: lexicographic (time, index) packed key;
         # keys are unique, so k unrolled min rounds find the k-th smallest.
-        big = float(t_max + 1) * q_pad
+        # ``big`` only needs to exceed every live key, so the static
+        # envelope bound serves all designs.
+        big = float((t_window + 1) * q_pad)
         key = t_fire * q_pad + qi
         rem = key
         kth = jnp.float32(0)
         for _ in range(wta_k):
             kth = jnp.min(rem)
             rem = jnp.where(rem <= kth, big, rem)
-        win = (key <= kth) & (t_fire < float(t_max))
-        y = jnp.where(win, t_fire, float(t_max))  # [1, q_pad]
+        win = (key <= kth) & (t_fire < t_max)
+        y = jnp.where(win, t_fire, t_max)  # [1, q_pad]
         y_out[...] = y
 
         # expected STDP on the resident float weights (same algebra as
         # kernels/ref.stdp_ref), padded neurons frozen.
         x = t_ref[...].T  # [p_pad, 1]
-        xs = x < float(t_max)
-        ys = y < float(t_max)
+        xs = x < t_max
+        ys = y < t_max
         if stabilize:
             frac = jnp.clip(w * (1.0 / w_max), 0.0, 1.0)
             eps = 1.0 / (2 * w_max)
@@ -239,12 +307,72 @@ def _fused_kernel(
         delta = jnp.where(capture, mu_capture * s_plus, 0.0)
         delta = jnp.where(backoff, -mu_backoff * s_minus, delta)
         delta = jnp.where(search, mu_search, delta)
-        delta = jnp.where(qi < float(q), delta, 0.0)
-        w_out[...] = jnp.clip(w + delta, 0.0, float(w_max))
+        delta = jnp.where(qi < q_live, delta, 0.0)
+        w_out[0] = jnp.clip(w + delta, 0.0, float(w_max))
 
     @pl.when(i != last)
     def _carry():
-        w_out[...] = w
+        w_out[0] = w
+
+
+def fused_step_pallas_padded(
+    w: jnp.ndarray,
+    t_in: jnp.ndarray,
+    operands: jnp.ndarray,
+    *,
+    t_window: int,
+    w_max: int,
+    wta_k: int,
+    stabilize: bool,
+    t_blk: int = 128,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One fused Pallas step for a whole padded design batch.
+
+    Args:
+      w: [D, p_pad, q_pad] resident weights (pad rows/cols zero).
+      t_in: [D, p_pad] f32 volley, one per design; any time >= that design's
+        runtime ``t_max`` operand is silent (padding synapses included).
+      operands: [D, N_OPERANDS] f32 runtime design operands
+        (``design_operands``) — lives in SMEM, read per grid step.
+      t_window: static evaluation length of the envelope (>= every design's
+        ``t_max``); padded up to a ``t_blk`` multiple.
+      interpret: run under the Pallas interpreter — pass the value from
+        ``repro.core.backend.pallas_interpret()``; do not hardcode.
+
+    Returns:
+      (w_new [D, p_pad, q_pad], y [D, q_pad] post-WTA winner times, f32).
+    """
+    d, p_pad, q_pad = w.shape
+    t_pad = _pad_to(t_window, t_blk)
+    kern = functools.partial(
+        _fused_kernel,
+        t_blk=t_blk,
+        t_window=t_pad,
+        n_planes=w_max + 1,
+        wta_k=wta_k,
+        w_max=w_max,
+        stabilize=stabilize,
+    )
+    w_new, y = pl.pallas_call(
+        kern,
+        grid=(d, t_pad // t_blk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, p_pad), lambda di, i: (di, 0)),
+            pl.BlockSpec((1, p_pad, q_pad), lambda di, i: (di, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, p_pad, q_pad), lambda di, i: (di, 0, 0)),
+            pl.BlockSpec((1, q_pad), lambda di, i: (di, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d, p_pad, q_pad), jnp.float32),
+            jax.ShapeDtypeStruct((d, q_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(operands, t_in, w)
+    return w_new, y
 
 
 def fused_step_pallas(
@@ -254,51 +382,36 @@ def fused_step_pallas(
     t_blk: int = 128,
     interpret: bool = False,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """One fused Pallas column step on pre-padded operands.
+    """One fused Pallas column step on pre-padded single-column operands.
+
+    Thin D=1 wrapper over ``fused_step_pallas_padded`` — the config's
+    threshold / window / q / mus become runtime operands of the same kernel
+    that serves the padded design batch.
 
     Args:
       w_pad: [p_pad, q_pad] resident weights (pad rows/cols zero).
-      t_in_pad: [1, p_pad] volley (padding/silent >= 2 * T_pad).
+      t_in_pad: [1, p_pad] volley (padding/silent >= cfg.t_max).
       interpret: run under the Pallas interpreter — pass the value from
         ``repro.core.backend.pallas_interpret()``; do not hardcode.
 
     Returns:
       (w_new [p_pad, q_pad], y [1, q_pad] post-WTA winner times, float).
     """
-    p_pad, q_pad = w_pad.shape
-    t_pad = _pad_to(cfg.t_max, t_blk)
-    kern = functools.partial(
-        _fused_kernel,
-        t_blk=t_blk,
-        t_max=cfg.t_max,
-        q=cfg.q,
-        n_planes=cfg.neuron.w_max + 1,
-        threshold=cfg.neuron.threshold,
-        wta_k=cfg.wta.k,
-        mu_capture=cfg.stdp.mu_capture,
-        mu_backoff=cfg.stdp.mu_backoff,
-        mu_search=cfg.stdp.mu_search,
-        w_max=cfg.neuron.w_max,
-        stabilize=cfg.stdp.stabilizer == "half",
+    operands = design_operands(
+        jnp.full((1,), cfg.neuron.threshold, jnp.float32),
+        jnp.full((1,), cfg.t_max, jnp.float32),
+        jnp.full((1,), cfg.q, jnp.float32),
+        cfg.stdp.mu_capture,
+        cfg.stdp.mu_backoff,
+        cfg.stdp.mu_search,
     )
-    w_new, y = pl.pallas_call(
-        kern,
-        grid=(t_pad // t_blk,),
-        in_specs=[
-            pl.BlockSpec((1, p_pad), lambda i: (0, 0)),
-            pl.BlockSpec((p_pad, q_pad), lambda i: (0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((p_pad, q_pad), lambda i: (0, 0)),
-            pl.BlockSpec((1, q_pad), lambda i: (0, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((p_pad, q_pad), jnp.float32),
-            jax.ShapeDtypeStruct((1, q_pad), jnp.float32),
-        ],
-        interpret=interpret,
-    )(t_in_pad, w_pad)
-    return w_new, y
+    w_new, y = fused_step_pallas_padded(
+        w_pad[None], t_in_pad, operands,
+        t_window=cfg.t_max, w_max=cfg.neuron.w_max, wta_k=cfg.wta.k,
+        stabilize=cfg.stdp.stabilizer == "half",
+        t_blk=t_blk, interpret=interpret,
+    )
+    return w_new[0], y
 
 
 # ------------------------------------------------------------- fused fit
@@ -355,8 +468,8 @@ def _fused_fit_scan(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "t_window", "w_max", "wta_k", "mu_capture", "mu_backoff",
-        "mu_search", "stabilize", "response", "epochs",
+        "t_window", "w_max", "wta_k", "stabilize", "response", "epochs",
+        "lowering", "t_blk",
     ),
     donate_argnums=(0,),
 )
@@ -375,21 +488,53 @@ def fit_scan_padded(
     stabilize: bool,
     response: str,
     epochs: int,
+    lowering: str = "reference",
+    t_blk: int = 128,
 ):
     """All designs x all epochs x all volleys in ONE compiled program.
 
     The padding-envelope contract: every member design is padded into a
     shared (p_pad, q_pad, t_window) envelope, its per-design threshold /
-    effective window / live-neuron count become *traced* scalars, and the
-    fused column step is ``vmap``-ed over the leading design axis.  Callers
-    with the same envelope shapes and static hyper-parameters share one
-    compiled trace — this is what lets a heterogeneous design sweep
-    (``simulator.cluster_time_series_many``) and heterogeneous network
-    layers (``network.fit_greedy``) reuse each other's compilations.
+    effective window / live-neuron count / STDP mus become *traced* scalars
+    (runtime SMEM operands under the kernel lowerings, ``vmap``-ed operands
+    under the reference lowering), and the fused column step runs over the
+    leading design axis.  Callers with the same envelope shapes and static
+    hyper-parameters share one compiled trace — this is what lets a
+    heterogeneous design sweep (``simulator.cluster_time_series_many``) and
+    heterogeneous network layers (``network.fit_greedy``) reuse each
+    other's compilations: ONE compilation per envelope shape, never per
+    design.
+
+    Args:
+      lowering: 'mosaic' (TPU Mosaic kernel), 'interpret' (Pallas
+        interpreter, validation only) or 'reference' (pure jnp).  Callers
+        should pass ``repro.core.backend.padded_lowering(response)`` rather
+        than hardcoding a host assumption; the kernel lowerings support RNL
+        only (``check_fusable``).  All lowerings are bit-identical on
+        integer weight grids.
+      t_blk: kernel time-block length (kernel lowerings only).
+
+    This entry point is deterministic — expected-mode STDP and index
+    tie-break WTA need no PRNG key (that is part of the fused contract;
+    stochastic configs take the solver path via ``backend.resolve``).
 
     ``w`` is donated: the weight buffer stays resident across the whole
     epochs x volleys scan.
     """
+    if lowering not in LOWERINGS:
+        raise ValueError(f"unknown lowering: {lowering!r}")
+    if lowering != "reference":
+        if response not in fire_responses(lowering):
+            raise ValueError(
+                f"the padded kernel lowering supports response "
+                f"{fire_responses(lowering)}, got {response!r}; use "
+                "lowering='reference'"
+            )
+        return _fit_scan_padded_kernel(
+            w, xs, thresholds, t_maxes, q_actives,
+            t_window, w_max, wta_k, mu_capture, mu_backoff, mu_search,
+            stabilize, epochs, lowering, t_blk,
+        )
 
     def volley(wc, xt):  # wc: [D, p, q]; xt: [D, p]
         w2, _ = jax.vmap(
@@ -406,6 +551,51 @@ def fit_scan_padded(
 
     w, _ = jax.lax.scan(epoch, w, None, length=epochs)
     return w
+
+
+def _fit_scan_padded_kernel(
+    w, xs, thresholds, t_maxes, q_actives,
+    t_window, w_max, wta_k, mu_capture, mu_backoff, mu_search,
+    stabilize, epochs, lowering, t_blk,
+):
+    """Kernel-lowering body of ``fit_scan_padded`` (called inside its jit).
+
+    Re-pads the caller's envelope up to the Mosaic tile grid (p to a LANE
+    multiple, q to a SUBLANE multiple, t_window to a ``t_blk`` multiple),
+    packs the per-design scalars into the runtime SMEM operand array once,
+    and scans ``fused_step_pallas_padded`` over epochs x volleys.  Alignment
+    padding is masked exactly like caller padding: extra synapses are
+    silent, extra neurons sit above every ``q_active``.
+    """
+    d, p_env, q_env = w.shape
+    p_pad = _pad_to(p_env, LANE)
+    q_pad = _pad_to(q_env, SUBLANE)
+    operands = design_operands(
+        thresholds, t_maxes, q_actives, mu_capture, mu_backoff, mu_search
+    )
+    w_k = (
+        jnp.zeros((d, p_pad, q_pad), jnp.float32)
+        .at[:, :p_env, :q_env]
+        .set(w.astype(jnp.float32))
+    )
+    # alignment rows reuse the caller's sentinel convention (any time >=
+    # t_window is silent for all designs)
+    xs_k = _pad_volleys_silent(xs, p_pad, t_window)
+
+    def volley(wc, xt):  # wc: [D, p_pad, q_pad]; xt: [D, p_pad]
+        w2, _ = fused_step_pallas_padded(
+            wc, xt, operands,
+            t_window=t_window, w_max=w_max, wta_k=wta_k,
+            stabilize=stabilize, t_blk=t_blk,
+            interpret=lowering == "interpret",
+        )
+        return w2, None
+
+    def epoch(wc, _):
+        return jax.lax.scan(volley, wc, xs_k)
+
+    w_k, _ = jax.lax.scan(epoch, w_k, None, length=epochs)
+    return w_k[:, :p_env, :q_env]
 
 
 @functools.partial(
@@ -464,8 +654,7 @@ def fit_fused(
     q_pad = _pad_to(cfg.q, SUBLANE)
     t_pad = _pad_to(cfg.t_max, t_blk)
     w_pad = jnp.zeros((p_pad, q_pad), jnp.float32).at[: cfg.p, : cfg.q].set(w)
-    xs = jnp.full(x.shape[:1] + (p_pad,), 2.0 * t_pad, jnp.float32)
-    xs = xs.at[:, : cfg.p].set(x.astype(jnp.float32))
+    xs = _pad_volleys_silent(x, p_pad, 2.0 * t_pad)
     xs = jnp.where(xs >= cfg.t_max, 2.0 * t_pad, xs)
     w_new, ys = _fused_fit_scan(w_pad, xs, cfg, epochs, lowering, trace, t_blk)
     return {"w": w_new[: cfg.p, : cfg.q]}, ys

@@ -1,0 +1,98 @@
+"""Docs and tooling stay truthful (ISSUE 3 CI satellite).
+
+Two cheap guards wired into the tier-1 run:
+
+  * every relative markdown link / file reference in ``README.md`` and
+    ``docs/*.md`` must resolve to a real file in the repo — kernel/backend
+    contracts live in prose now, and a dangling cross-link is doc rot;
+  * ``benchmarks/run.py --check`` must exit zero, so the reproduction
+    commands the README documents cannot silently lose an import.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+# [text](target) markdown links; targets split from any #fragment below
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# `path/to/file.ext` backtick references that look like repo files
+_TICK = re.compile(
+    r"`([A-Za-z0-9_\-./]+\.(?:py|md|json|sh|txt|yaml|yml|toml))`"
+)
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def doc_files() -> list[pathlib.Path]:
+    docs = [REPO / "README.md"]
+    docs += sorted((REPO / "docs").glob("*.md"))
+    assert docs and all(d.exists() for d in docs)
+    return docs
+
+
+def _resolve(doc: pathlib.Path, target: str) -> bool:
+    """A doc target may be relative to the doc's directory or repo-rooted."""
+    target = target.split("#", 1)[0]
+    if not target:
+        return True  # pure-fragment link into the same document
+    return (doc.parent / target).exists() or (REPO / target).exists()
+
+
+@pytest.mark.parametrize("doc", doc_files(), ids=lambda d: d.name)
+def test_markdown_links_resolve(doc: pathlib.Path):
+    text = doc.read_text()
+    broken = []
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(_EXTERNAL):
+            continue
+        if not _resolve(doc, target):
+            broken.append(target)
+    assert not broken, f"{doc.relative_to(REPO)}: broken links {broken}"
+
+
+@pytest.mark.parametrize("doc", doc_files(), ids=lambda d: d.name)
+def test_backtick_file_references_resolve(doc: pathlib.Path):
+    """`path.py`-style references must point at real files; module paths
+    with no directory part (e.g. `conftest.py` in prose) only need to exist
+    somewhere under the repo."""
+    text = doc.read_text()
+    broken = []
+    for m in _TICK.finditer(text):
+        target = m.group(1)
+        if "/" in target:
+            if not _resolve(doc, target):
+                broken.append(target)
+        elif not (
+            (doc.parent / target).exists()
+            or (REPO / target).exists()
+            or list(REPO.glob(f"**/{target}"))
+        ):
+            broken.append(target)
+    assert not broken, f"{doc.relative_to(REPO)}: dangling file refs {broken}"
+
+
+def test_benchmarks_import_check_passes():
+    """README's reproduction commands depend on every registered benchmark
+    importing; --check exits nonzero on import rot."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--check"],
+        cwd=REPO,
+        env={
+            "PYTHONPATH": str(REPO / "src"),
+            "PATH": "/usr/bin:/bin:/usr/local/bin",
+            "HOME": str(pathlib.Path.home()),
+        },
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert proc.returncode == 0, (
+        f"benchmarks.run --check failed:\n{proc.stdout}\n{proc.stderr}"
+    )
+    assert "import cleanly" in proc.stdout

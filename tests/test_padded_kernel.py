@@ -1,0 +1,214 @@
+"""Padded-envelope fused scan on the Mosaic kernel (ISSUE 3 acceptance).
+
+The contract under test:
+  * the Pallas kernel lowering of ``fit_scan_padded`` (interpreter stands in
+    for Mosaic off-TPU) is BIT-IDENTICAL to the reference lowering on
+    integer weights for a *heterogeneous* padded batch — mixed thresholds,
+    effective windows and live-neuron counts all ride as runtime operands;
+  * one pallas_call covers the whole design batch and the scan compiles
+    exactly ONCE per envelope shape: changing every per-design scalar
+    (threshold, t_max, q_active, STDP mus) retraces nothing;
+  * ``backend.padded_lowering`` picks the kernel wherever it supports the
+    response function and the reference body elsewhere — 'pallas' means
+    Mosaic end-to-end on TPU, with no silent per-host semantic switch;
+  * the single-column kernel entry point is the same runtime-operand kernel
+    (D=1), still matching the reference lowering.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backend
+from repro.core.types import TIME_DTYPE
+from repro.kernels import fused_column
+
+
+def padded_batch(seed=0, d=3, p_pad=20, q_pad=5, t_window=24, n=8):
+    """Heterogeneous integer-grid designs sharing one padding envelope."""
+    rng = np.random.default_rng(seed)
+    thresholds = jnp.asarray([7.0, 4.0, 5.0][:d], jnp.float32)
+    t_maxes = jnp.asarray([24, 12, 20][:d], TIME_DTYPE)
+    q_actives = jnp.asarray([5, 2, 3][:d], TIME_DTYPE)
+    w = jnp.asarray(rng.integers(0, 8, (d, p_pad, q_pad)), jnp.float32)
+    # live inputs in [0, t_max_d); anything >= t_max_d is silent by contract
+    xs = jnp.asarray(rng.integers(0, 28, (n, d, p_pad)), TIME_DTYPE)
+    return w, xs, thresholds, t_maxes, q_actives, t_window
+
+
+def run_padded(lowering, seed=0, **kw):
+    w, xs, th, tm, qa, t_window = padded_batch(seed=seed)
+    args = dict(
+        t_window=t_window, w_max=7, wta_k=1, mu_capture=1.0,
+        mu_backoff=1.0, mu_search=1.0, stabilize=False, response="rnl",
+        epochs=2, lowering=lowering,
+    )
+    args.update(kw)
+    return fused_column.fit_scan_padded(w, xs, th, tm, qa, **args)
+
+
+def test_padded_kernel_bit_identical_to_reference_heterogeneous():
+    """Acceptance: runtime-operand kernel == reference lowering, exactly,
+    for a batch mixing thresholds, effective t_max and live-q."""
+    w_ref = run_padded("reference")
+    w_int = run_padded("interpret")
+    np.testing.assert_array_equal(np.asarray(w_ref), np.asarray(w_int))
+    # integer mus on the integer grid: the run must stay on the grid, so
+    # equality above is exact arithmetic, not a float coincidence
+    assert float(jnp.max(jnp.abs(w_ref - jnp.round(w_ref)))) == 0.0
+
+
+def test_padded_kernel_wta_k_and_stabilizer_paths_match():
+    """k>1 WTA and the half stabilizer exercise the remaining kernel
+    branches; the stabilizer leaves the grid, so weights get allclose."""
+    w_ref = run_padded("reference", seed=1, wta_k=2, stabilize=True)
+    w_int = run_padded("interpret", seed=1, wta_k=2, stabilize=True)
+    np.testing.assert_allclose(
+        np.asarray(w_ref), np.asarray(w_int), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_padded_scan_compiles_once_per_envelope_across_designs():
+    """Acceptance: one compilation per envelope shape.  Re-running with
+    every per-design scalar changed — thresholds, windows, live-q, and the
+    (now traced) STDP mus — must reuse the first trace."""
+    fn = fused_column.fit_scan_padded
+    # unique envelope (p_pad=20, q_pad=5, t_window=23) so the cache keys
+    # in this test are not shared with other tests
+    w0, xs0, th0, _, qa0, _ = padded_batch(seed=2)
+    before = fn._cache_size()
+    fn(
+        w0, xs0, th0,
+        jnp.asarray([23, 12, 20], TIME_DTYPE), qa0,
+        t_window=23, w_max=7, wta_k=1, mu_capture=1.0, mu_backoff=1.0,
+        mu_search=1.0, stabilize=False, response="rnl", epochs=2,
+        lowering="interpret",
+    )
+    after_first = fn._cache_size()
+    assert after_first == before + 1, "first sweep must compile exactly once"
+    w, xs, *_ = padded_batch(seed=2)
+    fn(
+        w, xs,
+        jnp.asarray([3.0, 9.0, 6.0], jnp.float32),  # new thresholds
+        jnp.asarray([16, 23, 8], TIME_DTYPE),  # new windows
+        jnp.asarray([1, 4, 2], TIME_DTYPE),  # new live-q
+        t_window=23, w_max=7, wta_k=1,
+        mu_capture=2.0, mu_backoff=1.0, mu_search=3.0,  # new mus
+        stabilize=False, response="rnl", epochs=2, lowering="interpret",
+    )
+    assert fn._cache_size() == after_first, (
+        "per-design scalars are runtime operands; changing them must not "
+        "recompile"
+    )
+    # a different envelope shape IS a new trace
+    w2, xs2, th, tm, qa, _ = padded_batch(seed=3, p_pad=24)
+    fn(
+        w2, xs2, th, tm, qa,
+        t_window=23, w_max=7, wta_k=1, mu_capture=1.0, mu_backoff=1.0,
+        mu_search=1.0, stabilize=False, response="rnl", epochs=2,
+        lowering="interpret",
+    )
+    assert fn._cache_size() == after_first + 1
+
+
+def test_padded_lowering_selects_kernel_where_supported(monkeypatch):
+    """'pallas' means Mosaic for padded batches on TPU; SNL (which the
+    kernel's plane decomposition does not implement) takes the reference
+    body of the same algebra instead of raising or switching semantics."""
+    assert backend.padded_lowering("rnl") == backend.pallas_lowering()
+    assert backend.padded_lowering("snl") == "reference"
+    monkeypatch.setattr(backend, "on_tpu", lambda: True)
+    assert backend.padded_lowering("rnl") == "mosaic"
+    assert backend.padded_lowering("snl") == "reference"
+
+
+def test_padded_kernel_rejects_snl_and_bad_lowering():
+    with pytest.raises(ValueError, match="reference"):
+        run_padded("interpret", response="snl")
+    with pytest.raises(ValueError, match="lowering"):
+        run_padded("mosaik")
+
+
+def test_design_operands_layout():
+    """docs/kernels.md documents this layout; the kernel indexes by column
+    number, so the order is load-bearing."""
+    ops = fused_column.design_operands(
+        jnp.asarray([7.0, 4.0]), jnp.asarray([24, 12]), jnp.asarray([5, 2]),
+        1.0, 2.0, 3.0,
+    )
+    assert ops.shape == (2, fused_column.N_OPERANDS)
+    assert ops.dtype == jnp.float32
+    np.testing.assert_array_equal(
+        np.asarray(ops), [[7, 24, 5, 1, 2, 3], [4, 12, 2, 1, 2, 3]]
+    )
+    assert fused_column.OPERAND_COLS == (
+        "threshold", "t_max", "q_active",
+        "mu_capture", "mu_backoff", "mu_search",
+    )
+
+
+def test_network_pallas_mode_drives_kernel_end_to_end(monkeypatch):
+    """mode='pallas' reaches the runtime-operand kernel through
+    network.fit_greedy (interpreter standing in for Mosaic off-TPU) and
+    trains bit-identically to the reference lowering."""
+    from repro.core import network
+    from repro.core.types import (
+        ColumnConfig, LayerConfig, NetworkConfig, NeuronConfig, STDPConfig,
+    )
+
+    def int_col(p, q, t_max, threshold):
+        return ColumnConfig(
+            p=p, q=q, t_max=t_max,
+            neuron=NeuronConfig(threshold=threshold, w_max=7),
+            stdp=STDPConfig(
+                mu_capture=1.0, mu_backoff=1.0, mu_search=1.0,
+                stabilizer="none",
+            ),
+        )
+
+    net = NetworkConfig(layers=(
+        LayerConfig(columns=2, column=int_col(9, 4, 22, 4.0)),
+        LayerConfig(columns=1, column=int_col(8, 2, 22, 3.0)),
+    ))
+    rng = np.random.default_rng(5)
+    params = [
+        {
+            "w": jnp.asarray(
+                rng.integers(0, 8, (l.columns, l.column.p, l.column.q)),
+                jnp.float32,
+            )
+        }
+        for l in net.layers
+    ]
+    x = jnp.asarray(rng.integers(0, 26, (6, 9)), TIME_DTYPE)
+    ref = network.fit_greedy(params, x, net, epochs=2, mode="pallas")
+    monkeypatch.setattr(backend, "padded_lowering", lambda resp: "interpret")
+    kern = network.fit_greedy(params, x, net, epochs=2, mode="pallas")
+    for li, (a, b) in enumerate(zip(ref, kern)):
+        np.testing.assert_array_equal(
+            np.asarray(a["w"]), np.asarray(b["w"]),
+            err_msg=f"layer {li}: kernel path diverges from reference",
+        )
+
+
+def test_single_column_step_is_same_runtime_operand_kernel():
+    """fused_step_pallas is the D=1 slice of the padded kernel; a full
+    single-column fit through it still matches the reference lowering."""
+    from repro.core.types import ColumnConfig, NeuronConfig
+
+    cfg = ColumnConfig(p=13, q=3, t_max=21, neuron=NeuronConfig(threshold=5.0))
+    rng = np.random.default_rng(4)
+    params = {
+        "w": jnp.asarray(rng.integers(0, 8, (cfg.p, cfg.q)), jnp.float32)
+    }
+    x = jnp.asarray(rng.integers(0, cfg.t_max + 4, (5, cfg.p)), jnp.int32)
+    p_ref, y_ref = fused_column.fit_fused(
+        params, x, cfg, epochs=2, lowering="reference", trace=True
+    )
+    p_int, y_int = fused_column.fit_fused(
+        params, x, cfg, epochs=2, lowering="interpret", trace=True
+    )
+    np.testing.assert_array_equal(np.asarray(y_ref), np.asarray(y_int))
+    np.testing.assert_allclose(
+        np.asarray(p_ref["w"]), np.asarray(p_int["w"]), rtol=1e-6, atol=1e-6
+    )
