@@ -21,5 +21,32 @@ def time_call(fn, *args, repeats: int = 3, warmup: int = 1, **kw) -> float:
     return times[len(times) // 2] * 1e6
 
 
+def time_pair(
+    fn_a, fn_b, repeats: int = 7, warmup: int = 1
+) -> tuple[float, float]:
+    """Min wall-time per call (us) for two workloads, measured in
+    ALTERNATING rounds.
+
+    For head-to-head rows (fused vs legacy) on a shared, drifting host —
+    frequency scaling, co-tenant load — sequential timing systematically
+    biases whichever side runs first, so the rounds alternate; and ambient
+    interference only ever ADDS time, so the minimum over rounds is the
+    robust estimator of each side's true cost (the same reasoning behind
+    ``timeit``'s min-not-mean recommendation).
+    """
+    for _ in range(warmup):
+        fn_a()
+        fn_b()
+    ta, tb = [], []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn_a()
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fn_b()
+        tb.append(time.perf_counter() - t0)
+    return min(ta) * 1e6, min(tb) * 1e6
+
+
 def emit(name: str, us: float, derived) -> None:
     print(f"{name},{us:.1f},{derived}")

@@ -1,4 +1,4 @@
-"""Fused online-STDP training benchmark — the ISSUE 1/2 perf trajectory.
+"""Fused online-STDP training benchmark — the ISSUE 1/2/4 perf trajectory.
 
 Times the fused single-scan training path (one jitted, donated lax.scan over
 epochs x volleys, fused fire+WTA+STDP body) against the legacy per-epoch
@@ -6,10 +6,15 @@ loop, on paper column geometries, a padded heterogeneous design sweep (the
 ISSUE 3 tentpole: ONE ``fit_scan_padded`` program with runtime design
 operands vs one fused fit per design) AND a multi-layer network (the ISSUE 2
 tentpole: ``network.fit_greedy`` as one jitted padded scan per layer vs the
-untraced per-epoch Python loop it replaced).  Emits ``BENCH_train.json``
-(us/volley + MXU FLOPs of the fused kernel algebra) so the perf trajectory —
-including the reference-vs-kernel gap on the padded path (the 'lowering'
-column) — is tracked PR over PR; later PRs append comparable numbers.
+untraced per-epoch Python loop it replaced).  Since ISSUE 4 the padded
+cases run the volley-blocked scan (``v_blk`` volleys per step, one kernel
+invocation / one unrolled reference body per block) and report BOTH warm
+and cold numbers — the blocked path must win warm throughput, not just the
+compile cliff, and ``main`` prints a REGRESSION flag whenever a fused case
+reports warm speedup < 1.  Emits ``BENCH_train.json`` (us/volley + MXU
+FLOPs of the fused kernel algebra) so the perf trajectory — including the
+reference-vs-kernel gap on the padded path (the 'lowering' column) — is
+tracked PR over PR; later PRs append comparable numbers.
 
 MXU FLOPs count the one-hot plane matmuls of the fused Pallas kernel
 (2 * (w_max+1) * p * q * t_max per volley) — the work the TPU lowering puts
@@ -26,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit, time_call, time_pair
 from repro.core import backend, column, network
 from repro.core.types import (
     ColumnConfig, LayerConfig, NetworkConfig, NeuronConfig, TIME_DTYPE,
@@ -109,6 +114,7 @@ def run_sweep() -> dict:
     q_pad = max(c.q for c in cfgs)
     t_window = max(c.t_max for c in cfgs)
     lowering = backend.padded_lowering(c0.neuron.response)
+    v_blk = backend.volley_block(lowering, SWEEP_B)
 
     w0 = np.zeros((d, SWEEP_P, q_pad), np.float32)
     for i, c in enumerate(cfgs):
@@ -129,6 +135,7 @@ def run_sweep() -> dict:
             mu_search=c0.stdp.mu_search,
             stabilize=c0.stdp.stabilizer == "half",
             response=c0.neuron.response, epochs=EPOCHS, lowering=lowering,
+            v_blk=v_blk,
         )
         jax.block_until_ready(w)
 
@@ -154,8 +161,9 @@ def run_sweep() -> dict:
     legacy()
     cold_legacy_us = (time.perf_counter() - t0) * 1e6
 
-    us_padded = time_call(padded)
-    us_legacy = time_call(legacy)
+    # alternating rounds: the warm fused-vs-legacy ratio is the ISSUE 4
+    # acceptance bar, so neither side may soak up host drift alone
+    us_padded, us_legacy = time_pair(padded, legacy)
     volleys = EPOCHS * SWEEP_B * d
     mxu_flops = sum(
         2 * (c.neuron.w_max + 1) * c.p * c.q * c.t_max for c in cfgs
@@ -164,9 +172,12 @@ def run_sweep() -> dict:
         "case": f"sweep{d}x{SWEEP_P}p",
         "backend": "pallas",
         "lowering": lowering,
+        "v_blk": v_blk,
         "fused_us_per_volley": us_padded / volleys,
         "legacy_us_per_volley": us_legacy / volleys,
         "speedup": us_legacy / max(us_padded, 1e-9),
+        "cold_us_per_volley": cold_padded_us / volleys,
+        "cold_legacy_us_per_volley": cold_legacy_us / volleys,
         "cold_speedup": cold_legacy_us / max(cold_padded_us, 1e-9),
         "traces": 1,
         "legacy_traces": d,
@@ -242,14 +253,24 @@ def run_network() -> dict:
             h = network._apply_layer({"w": w}, h, layer, "auto")
         jax.block_until_ready(h)
 
-    us_fused = time_call(fused)
-    us_legacy = time_call(legacy)
+    # cold first calls: the compile cliff of the blocked per-layer scans vs
+    # the legacy per-epoch dispatch loop
+    t0 = time.perf_counter()
+    fused()
+    cold_fused_us = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    legacy()
+    cold_legacy_us = (time.perf_counter() - t0) * 1e6
+
+    # alternating rounds, same rationale as run_sweep
+    us_fused, us_legacy = time_pair(fused, legacy)
     volleys = EPOCHS * NET_B
     mxu_flops = sum(
         l.columns * 2 * (l.column.neuron.w_max + 1)
         * l.column.p * l.column.q * l.column.t_max
         for l in net.layers
     )
+    lowering = backend.padded_lowering(net.layers[0].column.neuron.response)
     return {
         "case": "net96-4x8-1x5",
         "backend": backend.resolve(
@@ -257,12 +278,14 @@ def run_network() -> dict:
         ),
         # the padded per-layer scan lowers through backend.padded_lowering:
         # Mosaic kernel on TPU (runtime design operands), reference off-TPU
-        "lowering": backend.padded_lowering(
-            net.layers[0].column.neuron.response
-        ),
+        "lowering": lowering,
+        "v_blk": backend.volley_block(lowering, NET_B),
         "fused_us_per_volley": us_fused / volleys,
         "legacy_us_per_volley": us_legacy / volleys,
         "speedup": us_legacy / max(us_fused, 1e-9),
+        "cold_us_per_volley": cold_fused_us / volleys,
+        "cold_legacy_us_per_volley": cold_legacy_us / volleys,
+        "cold_speedup": cold_legacy_us / max(cold_fused_us, 1e-9),
         "mxu_flops_per_volley": mxu_flops,
     }
 
@@ -284,6 +307,17 @@ def main(argv=None) -> None:
     for r in rows:
         emit(f"train/{r['case']}", r["fused_us_per_volley"],
              f"speedup={r['speedup']:.2f}x flops={r['mxu_flops_per_volley']:.2e}")
+    # warm throughput is the ISSUE 4 acceptance bar: a fused case that only
+    # wins the compile cliff is a regression, and says so loudly
+    for r in rows:
+        if r["speedup"] < 1.0:
+            print(
+                f"REGRESSION: {r['case']} warm fused speedup "
+                f"{r['speedup']:.2f}x < 1.0 vs legacy "
+                f"({r['fused_us_per_volley']:.1f} vs "
+                f"{r['legacy_us_per_volley']:.1f} us/volley, "
+                f"lowering={r['lowering']})"
+            )
 
 
 if __name__ == "__main__":

@@ -142,7 +142,10 @@ def cluster_assignments(
     """Winner neuron index per volley = cluster id (paper's clustering use).
 
     Volleys where no neuron spikes are assigned cluster q (an 'unclustered'
-    bucket), matching the simulator's rand-index accounting.
+    bucket), matching the simulator's rand-index accounting.  Assignment is
+    batched, never scanned: the solver backends forward the whole stream in
+    one call, and the 'pallas' forward fires volley *blocks*
+    (``backend.volley_block``) off-TPU / the kernel grid on TPU.
     """
     y, win = apply(params, x_times, cfg, mode)
     any_spike = win.any(axis=-1)

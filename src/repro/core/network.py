@@ -24,11 +24,13 @@ donated ``lax.scan``:
   (p, q, t_max) envelope and the fused column step runs over the layer's
   columns axis, so heterogeneous layers reuse one compiled step when close
   enough in size that padding compute stays bounded (at most one
-  compilation per distinct layer shape).  The padded scan lowers through
-  ``backend.padded_lowering``: the Mosaic kernel on TPU (per-layer
-  threshold / window / live-q / STDP mus are runtime SMEM operands of one
-  static envelope), the jnp reference body of the same algebra elsewhere —
-  bit-identical on integer weight grids either way;
+  compilation per distinct layer shape).  The scan is volley-blocked
+  (``backend.volley_block`` volleys folded per step, bit-identical to the
+  per-volley fold) and lowers through ``backend.padded_lowering``: the
+  Mosaic kernel on TPU (per-layer threshold / window / live-q / STDP mus
+  are runtime SMEM operands of one static envelope), the jnp reference
+  body of the same algebra elsewhere — bit-identical on integer weight
+  grids either way;
 * layers that resolve to 'event' / 'cycle' (LIF, stochastic STDP, random
   tie-break, ...) run the same solver volley body as ``column.fit``
   (``backend.solver_volley_step``) scanned over epochs x volleys and
@@ -293,6 +295,7 @@ def _fit_layer_fused(
         mu_search=cfg.stdp.mu_search,
         stabilize=cfg.stdp.stabilizer == "half",
         response=cfg.neuron.response, epochs=epochs, lowering=lowering,
+        # v_blk defaults to the central backend.volley_block policy
     )
     return w_new[:, : cfg.p, : cfg.q]
 

@@ -19,9 +19,11 @@ Three clustering front-ends share the loop:
 * ``cluster_time_series`` — one column design, one stream.
 * ``cluster_time_series_many`` — a whole *design sweep* as ONE compiled
   program: every design is padded into a shared (p, q, t_max) envelope and
-  the fused training step is ``vmap``-ed over the design axis (threshold /
-  window / live-neuron count become traced per-design scalars); the padded
-  scans live in ``repro.kernels.fused_column``.
+  the fused training step runs over the design axis (threshold / window /
+  live-neuron count become traced per-design scalars), advancing
+  ``backend.volley_block`` volleys per scan step; assignment batches the
+  whole stream instead of scanning it.  The padded scans live in
+  ``repro.kernels.fused_column``.
 * ``cluster_time_series_network`` — a multi-layer ``NetworkConfig`` design
   through the same encode -> fit -> assign -> rand-index loop, trained
   greedily layer-by-layer via ``network.fit_greedy`` (each layer one jitted
@@ -162,8 +164,9 @@ def cluster_time_series_many(
     traced scalars — runtime SMEM operands of the Mosaic kernel on TPU,
     ``vmap``-ed operands of the reference body elsewhere
     (``backend.padded_lowering`` picks) — and the whole sweep is a single
-    jitted scan (plus one more for assignments), compiled ONCE per envelope
-    shape, never per design.
+    jitted volley-blocked scan (``backend.volley_block`` volleys folded
+    per step) plus one batched assignment pass, compiled ONCE per
+    envelope shape, never per design.
 
     This front-end always trains on the fused path (there is no ``mode``
     knob): every design must fit the fused contract — expected-mode STDP,
@@ -210,21 +213,30 @@ def cluster_time_series_many(
     t_window = max(c.t_max for c in cfgs)
     d = len(cfgs)
 
-    # Stack padded volleys [D, N, p_max]; padding is silent (>= t_window).
+    # Stack padded volleys [D, N, p_max] in ONE shot: every design's encode
+    # is stacked and the whole [D, N, p] block lands in the silent-padded
+    # buffer with a single set — no per-design ``.at[i].set`` dispatch
+    # chain, O(1) graph nodes however many designs ride the sweep.
+    # (Designs currently share p — the encoder pins it — so the stack is
+    # uniform; the single set keeps the p < p_max envelope case working
+    # should a future front-end relax that.)
+    enc = jnp.stack([_encode(x, c, encoder) for c in cfgs])  # [D, N, p]
     xs = jnp.full((d, n, p_max), t_window, TIME_DTYPE)
-    for i, c in enumerate(cfgs):
-        xs = xs.at[i, :, : c.p].set(_encode(x, c, encoder))
+    xs = xs.at[:, :, : enc.shape[-1]].set(enc)
     xs = jnp.swapaxes(xs, 0, 1)  # scan axis leading: [N, D, p_max]
 
     rng = jax.random.key(seed)
     rng, init_key = jax.random.split(rng)
     keys = jax.random.split(init_key, d)
-    w0 = jnp.stack([
-        jnp.zeros((p_max, q_max), jnp.float32)
-        .at[: c.p, : c.q]
-        .set(column_lib.init_params(k, c)["w"])
-        for k, c in zip(keys, cfgs)
-    ])
+    # Per-design init draws stay per-(key, shape) — seed semantics — but
+    # the padded stack is assembled host-side and shipped as ONE buffer
+    # instead of a D-deep ``.at[i].set`` graph.
+    w0_np = np.zeros((d, p_max, q_max), np.float32)
+    for i, (k, c) in enumerate(zip(keys, cfgs)):
+        w0_np[i, : c.p, : c.q] = np.asarray(
+            column_lib.init_params(k, c)["w"]
+        )
+    w0 = jnp.asarray(w0_np)
     thresholds = jnp.asarray([c.neuron.threshold for c in cfgs], jnp.float32)
     t_maxes = jnp.asarray([c.t_max for c in cfgs], TIME_DTYPE)
     q_actives = jnp.asarray([c.q for c in cfgs], TIME_DTYPE)
@@ -237,12 +249,19 @@ def cluster_time_series_many(
         mu_search=c0.stdp.mu_search,
         stabilize=c0.stdp.stabilizer == "half",
         response=c0.neuron.response, epochs=epochs, lowering=lowering,
+        # v_blk defaults to the central backend.volley_block policy
     )
+    # assignment batches volleys (kernel grid / vmapped blocks); the kernel
+    # fires on the integer weight grid, so it is only auto-selected when
+    # the trained weights concretely sit on that grid (pure lowering
+    # choice) — float weights keep the reference fire on every host.
+    asg_lowering = backend_lib.assign_lowering(c0.neuron.response, w)
     asg = np.asarray(
         fused_column.assign_padded(
             w, xs, thresholds, t_maxes, q_actives,
             t_window=t_window, wta_k=c0.wta.k,
-            response=c0.neuron.response,
+            response=c0.neuron.response, lowering=asg_lowering,
+            w_max=c0.neuron.w_max,
         )
     )
     train_seconds = time.perf_counter() - t0

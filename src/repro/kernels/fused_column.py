@@ -36,6 +36,20 @@ reads them from SMEM — so a stacked sweep of heterogeneous designs
 (``simulator.cluster_time_series_many``) or network layers
 (``network.fit_greedy``) compiles once per envelope shape, never per
 design.  The full kernel contract is documented in ``docs/kernels.md``.
+
+The padded scans advance in **volley blocks** (``v_blk=``): each step of the
+outer ``lax.scan`` folds ``v_blk`` sequential online-STDP volleys in one
+fused body — ONE kernel invocation whose in-kernel loop keeps the weight
+buffer VMEM-resident for the whole block (Mosaic), or one statically
+unrolled jnp block sharing precomputed input ramps (reference) — exactly
+online either way: volley i inside a block still sees the weights updated
+by volley i-1, bit-identical to ``v_blk=1`` and to ``mode='cycle'`` on
+integer weight grids.  Block tails are silent-padded (the sentinel
+contract) AND masked out of the weight fold by a per-block valid count,
+so a tail step is an exact weight no-op for any design — even degenerate
+``threshold <= 0`` ones.  ``assign_padded``, which has no sequential
+dependency at all, batches volleys into the kernel grid instead (one
+``pallas_call`` for the whole assignment pass).
 """
 from __future__ import annotations
 
@@ -132,6 +146,76 @@ def fire_dense_ref(
     return jnp.minimum(count, t_max).astype(TIME_DTYPE)
 
 
+def _masked_steps(t_in: jnp.ndarray, t_max, t_window: int) -> jnp.ndarray:
+    """Input-only fire transient: binary step functions [..., p, T].
+
+    ``s[p, t] = 1[t >= t_in[p]]`` for live inputs, 0 for silent ones — the
+    one weight-independent ingredient of the fire under BOTH responses
+    (see ``fire_planes_ref``), so a volley block precomputes it ONCE and
+    reuses it across the block's sequential weight updates.  ``t_max`` may
+    be traced (and broadcast against leading batch axes).
+    """
+    tv = jnp.arange(t_window, dtype=jnp.float32)
+    ti = t_in.astype(jnp.float32)
+    live = ti < t_max
+    return ((tv >= ti[..., None]) & live[..., None]).astype(jnp.float32)
+
+
+def fire_planes_ref(
+    w: jnp.ndarray,
+    s: jnp.ndarray,
+    threshold,
+    t_window: int,
+    t_max,
+    response: str,
+    w_max: int,
+) -> jnp.ndarray:
+    """Firing times from precomputed step transients, shift-GEMM form. -> [q].
+
+    The plane algebra of the Mosaic kernel (docs/kernels.md) restructured
+    for a memory-bound host.  With *integer* spike times and integer-grid
+    weights, ``min(relu(t - ti), w) = sum_{v=1..w_max} 1[w >= v] *
+    1[t - ti >= v]``, and the v-th indicator is just the step function
+    delayed by v cycles: ``1[t - ti >= v] == s[t - v]``.  So the RNL
+    potential needs NO ramp values and NO base term at all: the ``w_max``
+    cumulative weight planes ``1[w >= v]`` contract against the one small
+    shared binary step block in a single GEMM, and the per-plane delays
+    are applied afterwards on the tiny ``[q, T]`` products — a fraction of
+    the memory traffic of materializing per-plane ramp operands.  For SNL
+    the potential IS a matmul of the same steps against the weights.  All
+    intermediates are small integers in f32, so this is bit-identical to
+    ``fire_dense_ref`` on the integer weight grid (weights are rounded
+    here, mirroring the kernel) — integer spike times are a precondition
+    (they are the repo's time contract, ``types.TIME_DTYPE``).
+
+    Args:
+      w: [p, q] weights (rounded to the integer grid internally).
+      s: [p, T] step transient from ``_masked_steps``.
+    """
+    p, q = w.shape
+    tv = jnp.arange(t_window, dtype=jnp.float32)
+    wi = jnp.round(jnp.clip(w, 0.0, float(w_max)))
+    if response == "rnl":
+        vs = jnp.arange(1, w_max + 1, dtype=jnp.float32)
+        ge = (wi[:, None, :] >= vs[None, :, None]).astype(jnp.float32)
+        g = jax.lax.dot_general(
+            ge.reshape(p, w_max * q), s,
+            (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+        ).reshape(w_max, q, t_window)  # per-plane products, undelayed
+        gp = jnp.pad(g, ((0, 0), (0, 0), (w_max, 0)))
+        v = gp[0, :, w_max - 1: w_max - 1 + t_window]  # plane v=1
+        for sh in range(2, w_max + 1):  # static unroll: tiny [q, T] slices
+            v = v + gp[sh - 1, :, w_max - sh: w_max - sh + t_window]
+    else:  # snl: V = w^T @ steps
+        v = jax.lax.dot_general(
+            wi, s, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # [q, T]
+    below = (v < threshold) & (tv[None, :] < t_max)
+    count = below.sum(axis=-1)
+    return jnp.minimum(count, t_max).astype(TIME_DTYPE)
+
+
 def fused_step_ref(
     w: jnp.ndarray,
     t_in: jnp.ndarray,
@@ -178,6 +262,78 @@ def fused_step_ref(
     return w_new, y
 
 
+def _block_step_ref(
+    w: jnp.ndarray,
+    s: jnp.ndarray,
+    xt: jnp.ndarray,
+    threshold,
+    t_max,
+    q_active,
+    *,
+    t_window: int,
+    w_max: int,
+    wta_k: int,
+    mu_capture,
+    mu_backoff,
+    mu_search,
+    stabilize: bool,
+    response: str,
+    valid=True,
+) -> jnp.ndarray:
+    """One volley of a reference volley block: GEMM fire + WTA + STDP.
+
+    Same semantics as ``fused_step_ref`` with ``integer_fire=True`` (the
+    fused contract), but fed the precomputed step transient so the block's
+    unrolled loop shares the input-side work, and with the kernel's
+    min-round k-WTA (identical to ``ref.wta_ref`` — keys are unique —
+    without a sort in the hot loop).  ``valid`` (traced bool OK) marks
+    silent-padded block-tail volleys, which must fold nothing for ANY
+    design; it rides the existing out-of-envelope mask, costing no extra
+    op.  [p, q], [p, T], [p] -> [p, q].
+    """
+    q = w.shape[1]
+    qi = jnp.arange(q, dtype=TIME_DTYPE)
+    t_fire = fire_planes_ref(
+        w, s, threshold, t_window, t_max, response, w_max
+    )
+    t_fire = jnp.where(qi < q_active, t_fire, t_max)
+    # the kernels' WTA helper, shared verbatim (dtype-generic), so WTA
+    # semantics live in exactly one place
+    y = _kernel_wta(
+        t_fire, qi, t_max, wta_k=wta_k, t_window=t_window
+    ).astype(TIME_DTYPE)
+    w_new = ref.stdp_ref(
+        w, xt, y, mu_capture, mu_backoff, mu_search, w_max, t_max,
+        stabilize=stabilize,
+    )
+    return jnp.where((qi[None, :] < q_active) & valid, w_new, w)
+
+
+def _pad_volley_blocks(
+    xs: jnp.ndarray, v_blk: int, sentinel
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """[N, ...] volleys -> ([S, v_blk, ...] blocks, [S] valid counts).
+
+    Tail volleys of the last block are silent-padded (the sentinel
+    contract: every synapse at/past ``t_max``) AND masked out of the weight
+    fold by the per-block valid count — tail steps carry the weights
+    through unchanged for any design, unconditionally (a silent volley is
+    already a no-op for the positive thresholds real designs use, but the
+    explicit mask keeps bit-identity across ``v_blk`` even for degenerate
+    ``threshold <= 0`` designs, where silence still fires every neuron).
+    """
+    n = xs.shape[0]
+    s = -(-n // v_blk)
+    n_valid = jnp.minimum(
+        jnp.full((s,), v_blk, TIME_DTYPE),
+        n - v_blk * jnp.arange(s, dtype=TIME_DTYPE),
+    )
+    if s * v_blk != n:
+        pad = jnp.full((s * v_blk - n,) + xs.shape[1:], sentinel, xs.dtype)
+        xs = jnp.concatenate([xs, pad], axis=0)
+    return xs.reshape((s, v_blk) + xs.shape[1:]), n_valid
+
+
 # ------------------------------------------------------------ pallas kernel
 def design_operands(
     thresholds,
@@ -204,6 +360,83 @@ def design_operands(
         ],
         axis=1,
     )
+
+
+# The three kernels below (per-volley fused step, volley-blocked fused
+# step, batched assignment fire) share one in-kernel algebra.  It lives in
+# the value-level helpers here — plain jnp on values, traced into each
+# kernel — so a change to the fire/WTA/STDP semantics lands in every
+# lowering path at once (the cross-lowering bit-identity contract).
+def _kernel_fire_counts(wi, ti_col, t0, threshold, t_max, *, t_blk, n_planes):
+    """Sub-threshold cycle counts of one time block starting at ``t0``.
+
+    ``wi``: [p_pad, q_pad] integer-grid weights; ``ti_col``: [p_pad, 1]
+    input times down the sublanes.  Returns [1, q_pad] counts to add to the
+    design's accumulator: the RNL body potential via the in-kernel one-hot
+    plane matmuls, compared against the runtime threshold and masked by the
+    runtime window ``t_max``.
+    """
+    q_pad = wi.shape[1]
+    tv = t0 + jax.lax.broadcasted_iota(jnp.float32, (1, t_blk), 1)
+    a = jnp.maximum(tv - ti_col, 0.0)  # [p_pad, t_blk] ramps
+    base = jnp.sum(a, axis=0, keepdims=True)  # [1, t_blk]
+    acc = jnp.zeros((q_pad, t_blk), jnp.float32)
+    for v in range(n_planes):  # static unroll: planes from resident weights
+        plane = (wi == float(v)).astype(jnp.float32)  # [p_pad, q_pad]
+        av = a if v == 0 else jnp.maximum(a - float(v), 0.0)
+        acc = acc + jax.lax.dot_general(
+            plane, av, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # [q_pad, t_blk]
+    vqt = base - acc  # [q_pad, t_blk] body potential
+    below = (vqt < threshold) & (tv < t_max)  # mask window padding
+    return jnp.sum(below.astype(jnp.float32), axis=1)[None, :]
+
+
+def _kernel_wta(t_fire, qi, t_max, *, wta_k, t_window):
+    """k-WTA priority encoder on [1, q_pad] firing times -> winner times.
+
+    Lexicographic (time, index) packed key; keys are unique, so k unrolled
+    min rounds find the k-th smallest.  ``big`` only needs to exceed every
+    live key, so the static envelope bound serves all designs.  Dtype
+    follows ``t_fire``/``qi`` (f32 in the kernels, TIME_DTYPE on the
+    blocked reference path — keys are small integers, exact either way).
+    """
+    q_pad = t_fire.shape[-1]
+    big = (t_window + 1) * q_pad  # python int: weakly typed either way
+    key = t_fire * q_pad + qi
+    rem = key
+    kth = key.dtype.type(0)
+    for _ in range(wta_k):
+        kth = jnp.min(rem)
+        rem = jnp.where(rem <= kth, big, rem)
+    win = (key <= kth) & (t_fire < t_max)
+    return jnp.where(win, t_fire, t_max)  # [1, q_pad]
+
+
+def _kernel_stdp(
+    w, ti_col, y, qi, t_max, q_live,
+    mu_capture, mu_backoff, mu_search, *, w_max, stabilize,
+):
+    """Expected STDP on the resident float weights (same algebra as
+    ``kernels/ref.stdp_ref``), padded neurons (>= ``q_live``) frozen."""
+    xs = ti_col < t_max
+    ys = y < t_max
+    if stabilize:
+        frac = jnp.clip(w * (1.0 / w_max), 0.0, 1.0)
+        eps = 1.0 / (2 * w_max)
+        s_plus = (1.0 - frac) + eps
+        s_minus = frac + eps
+    else:
+        s_plus = s_minus = jnp.ones_like(w)
+    capture = xs & ys & (ti_col <= y)
+    backoff = (xs & ys & (ti_col > y)) | ((~xs) & ys)
+    search = xs & (~ys)
+    delta = jnp.where(capture, mu_capture * s_plus, 0.0)
+    delta = jnp.where(backoff, -mu_backoff * s_minus, delta)
+    delta = jnp.where(search, mu_search, delta)
+    delta = jnp.where(qi < q_live, delta, 0.0)
+    return jnp.clip(w + delta, 0.0, float(w_max))
 
 
 def _fused_kernel(
@@ -246,25 +479,13 @@ def _fused_kernel(
         y_out[...] = jnp.zeros_like(y_out)
 
     # --- fire: accumulate sub-threshold cycle counts for this time block.
-    t0 = (i * t_blk).astype(jnp.float32)
-    tv = t0 + jax.lax.broadcasted_iota(jnp.float32, (1, t_blk), 1)  # [1, t_blk]
     ti = t_ref[...].T  # [p_pad, 1] input times down the sublanes
-    a = jnp.maximum(tv - ti, 0.0)  # [p_pad, t_blk] ramps
-    base = jnp.sum(a, axis=0, keepdims=True)  # [1, t_blk]
-
     w = w_ref[0]
     wi = jnp.round(jnp.clip(w, 0.0, float(w_max)))  # integer fire grid
-    acc = jnp.zeros((q_pad, t_blk), jnp.float32)
-    for v in range(n_planes):  # static unroll: planes from resident weights
-        plane = (wi == float(v)).astype(jnp.float32)  # [p_pad, q_pad]
-        av = a if v == 0 else jnp.maximum(a - float(v), 0.0)
-        acc = acc + jax.lax.dot_general(
-            plane, av, (((0,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )  # [q_pad, t_blk]
-    vqt = base - acc  # [q_pad, t_blk] body potential
-    below = (vqt < threshold) & (tv < t_max)  # mask window padding
-    y_out[...] += jnp.sum(below.astype(jnp.float32), axis=1)[None, :]
+    y_out[...] += _kernel_fire_counts(
+        wi, ti, (i * t_blk).astype(jnp.float32), threshold, t_max,
+        t_blk=t_blk, n_planes=n_planes,
+    )
 
     # --- WTA + STDP once all time blocks have accumulated.
     @pl.when(i == last)
@@ -273,42 +494,13 @@ def _fused_kernel(
         qi = jax.lax.broadcasted_iota(jnp.float32, (1, q_pad), 1)
         t_fire = jnp.minimum(counts, t_max)
         t_fire = jnp.where(qi < q_live, t_fire, t_max)  # pad neurons silent
-
-        # k-WTA priority encoder: lexicographic (time, index) packed key;
-        # keys are unique, so k unrolled min rounds find the k-th smallest.
-        # ``big`` only needs to exceed every live key, so the static
-        # envelope bound serves all designs.
-        big = float((t_window + 1) * q_pad)
-        key = t_fire * q_pad + qi
-        rem = key
-        kth = jnp.float32(0)
-        for _ in range(wta_k):
-            kth = jnp.min(rem)
-            rem = jnp.where(rem <= kth, big, rem)
-        win = (key <= kth) & (t_fire < t_max)
-        y = jnp.where(win, t_fire, t_max)  # [1, q_pad]
+        y = _kernel_wta(t_fire, qi, t_max, wta_k=wta_k, t_window=t_window)
         y_out[...] = y
-
-        # expected STDP on the resident float weights (same algebra as
-        # kernels/ref.stdp_ref), padded neurons frozen.
-        x = t_ref[...].T  # [p_pad, 1]
-        xs = x < t_max
-        ys = y < t_max
-        if stabilize:
-            frac = jnp.clip(w * (1.0 / w_max), 0.0, 1.0)
-            eps = 1.0 / (2 * w_max)
-            s_plus = (1.0 - frac) + eps
-            s_minus = frac + eps
-        else:
-            s_plus = s_minus = jnp.ones_like(w)
-        capture = xs & ys & (x <= y)
-        backoff = (xs & ys & (x > y)) | ((~xs) & ys)
-        search = xs & (~ys)
-        delta = jnp.where(capture, mu_capture * s_plus, 0.0)
-        delta = jnp.where(backoff, -mu_backoff * s_minus, delta)
-        delta = jnp.where(search, mu_search, delta)
-        delta = jnp.where(qi < q_live, delta, 0.0)
-        w_out[0] = jnp.clip(w + delta, 0.0, float(w_max))
+        w_out[0] = _kernel_stdp(
+            w, t_ref[...].T, y, qi, t_max, q_live,
+            mu_capture, mu_backoff, mu_search,
+            w_max=w_max, stabilize=stabilize,
+        )
 
     @pl.when(i != last)
     def _carry():
@@ -373,6 +565,138 @@ def fused_step_pallas_padded(
         interpret=interpret,
     )(operands, t_in, w)
     return w_new, y
+
+
+def _fused_block_kernel(
+    scal_ref,  # [D, N_OPERANDS] f32 SMEM runtime design operands
+    nv_ref,  # [1] i32 SMEM      valid volleys in this block (tail masking)
+    t_ref,  # [1, v_blk, p_pad]  f32 volley block (silent >= design t_max)
+    w_ref,  # [1, p_pad, q_pad]  f32 resident weights
+    w_out,  # [1, p_pad, q_pad]  f32 updated weights
+    *,
+    v_blk: int,
+    t_blk: int,
+    t_window: int,
+    n_planes: int,
+    wta_k: int,
+    w_max: int,
+    stabilize: bool,
+):
+    """Volley-blocked fused body: fire + k-WTA + STDP x ``v_blk`` volleys.
+
+    Grid = (designs,).  ONE kernel invocation advances a whole volley block:
+    the weights live in VMEM for the entire block, and the in-kernel
+    ``fori_loop`` folds the block's volleys *sequentially* — volley i fires
+    against the weights volley i-1 wrote, exactly the online rule of the
+    per-volley kernel (``_fused_kernel``), with kernel launch, HBM weight
+    round-trips and plane rebuild setup amortized over ``v_blk`` updates.
+    Time blocks are an inner ``fori_loop`` here (they were the grid's inner
+    axis in the per-volley kernel); everything per-design still arrives as
+    runtime SMEM operands against the one static envelope.  Volleys at or
+    past the runtime valid count (the silent-padded block tail) fold
+    nothing.
+    """
+    _, p_pad, q_pad = w_ref.shape
+    d = pl.program_id(0)
+    nv = nv_ref[0]
+
+    threshold = scal_ref[d, 0]
+    t_max = scal_ref[d, 1]
+    q_live = scal_ref[d, 2]
+    mu_capture = scal_ref[d, 3]
+    mu_backoff = scal_ref[d, 4]
+    mu_search = scal_ref[d, 5]
+
+    t_all = t_ref[0]  # [v_blk, p_pad] resident volley block
+    qi = jax.lax.broadcasted_iota(jnp.float32, (1, q_pad), 1)
+    n_tb = t_window // t_blk
+
+    def volley(vi, w):
+        ti = jax.lax.dynamic_slice_in_dim(t_all, vi, 1, axis=0)  # [1, p_pad]
+        ti_col = ti.T  # [p_pad, 1] input times down the sublanes
+        wi = jnp.round(jnp.clip(w, 0.0, float(w_max)))  # integer fire grid
+
+        def time_block(bi, counts):
+            return counts + _kernel_fire_counts(
+                wi, ti_col, (bi * t_blk).astype(jnp.float32),
+                threshold, t_max, t_blk=t_blk, n_planes=n_planes,
+            )
+
+        counts = jax.lax.fori_loop(
+            0, n_tb, time_block, jnp.zeros((1, q_pad), jnp.float32)
+        )
+        t_fire = jnp.minimum(counts, t_max)
+        t_fire = jnp.where(qi < q_live, t_fire, t_max)
+        y = _kernel_wta(t_fire, qi, t_max, wta_k=wta_k, t_window=t_window)
+        w_new = _kernel_stdp(
+            w, ti_col, y, qi, t_max, q_live,
+            mu_capture, mu_backoff, mu_search,
+            w_max=w_max, stabilize=stabilize,
+        )
+        return jnp.where(vi < nv, w_new, w)  # tail volleys fold nothing
+
+    w_out[0] = jax.lax.fori_loop(0, v_blk, volley, w_ref[0])
+
+
+def fused_block_pallas_padded(
+    w: jnp.ndarray,
+    t_in: jnp.ndarray,
+    operands: jnp.ndarray,
+    n_valid: jnp.ndarray | None = None,
+    *,
+    t_window: int,
+    w_max: int,
+    wta_k: int,
+    stabilize: bool,
+    v_blk: int,
+    t_blk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """One volley-blocked fused Pallas step for a whole padded design batch.
+
+    Args:
+      w: [D, p_pad, q_pad] resident weights (pad rows/cols zero).
+      t_in: [D, v_blk, p_pad] f32 volley block per design; any time >= that
+        design's runtime ``t_max`` operand is silent (padding synapses and
+        block-tail volleys included).
+      operands: [D, N_OPERANDS] f32 runtime design operands
+        (``design_operands``).
+      n_valid: [1] i32 count of live volleys in the block (None = all
+        ``v_blk``); volleys at or past it fold nothing (tail masking).
+      interpret: run under the Pallas interpreter — pass the value from
+        ``repro.core.backend.pallas_interpret()``; do not hardcode.
+
+    Returns:
+      w_new [D, p_pad, q_pad] — the weights after the block's ``v_blk``
+      sequential online-STDP updates.
+    """
+    d, p_pad, q_pad = w.shape
+    t_pad = _pad_to(t_window, t_blk)
+    if n_valid is None:
+        n_valid = jnp.full((1,), v_blk, TIME_DTYPE)
+    kern = functools.partial(
+        _fused_block_kernel,
+        v_blk=v_blk,
+        t_blk=t_blk,
+        t_window=t_pad,
+        n_planes=w_max + 1,
+        wta_k=wta_k,
+        w_max=w_max,
+        stabilize=stabilize,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(d,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, v_blk, p_pad), lambda di: (di, 0, 0)),
+            pl.BlockSpec((1, p_pad, q_pad), lambda di: (di, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, p_pad, q_pad), lambda di: (di, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, p_pad, q_pad), jnp.float32),
+        interpret=interpret,
+    )(operands, n_valid.astype(TIME_DTYPE), t_in, w)
 
 
 def fused_step_pallas(
@@ -469,7 +793,7 @@ def _fused_fit_scan(
     jax.jit,
     static_argnames=(
         "t_window", "w_max", "wta_k", "stabilize", "response", "epochs",
-        "lowering", "t_blk",
+        "lowering", "t_blk", "v_blk",
     ),
     donate_argnums=(0,),
 )
@@ -490,6 +814,7 @@ def fit_scan_padded(
     epochs: int,
     lowering: str = "reference",
     t_blk: int = 128,
+    v_blk: int | None = None,
 ):
     """All designs x all epochs x all volleys in ONE compiled program.
 
@@ -505,6 +830,17 @@ def fit_scan_padded(
     other's compilations: ONE compilation per envelope shape, never per
     design.
 
+    The scan advances in volley blocks of ``v_blk``: each outer scan step
+    folds ``v_blk`` sequential online-STDP volleys in one fused body — one
+    kernel invocation with the weights VMEM-resident for the whole block
+    (kernel lowerings), one statically-unrolled jnp block sharing
+    precomputed input ramps (reference).  Exact online semantics either
+    way: results are bit-identical across every ``v_blk`` (enforced by
+    ``tests/test_blocked_scan.py``); blocking is a throughput knob, never a
+    semantic one.  Tail volleys of the last block are silent-padded and
+    masked out of the weight fold by a per-block valid count — exact
+    no-ops unconditionally.
+
     Args:
       lowering: 'mosaic' (TPU Mosaic kernel), 'interpret' (Pallas
         interpreter, validation only) or 'reference' (pure jnp).  Callers
@@ -513,6 +849,8 @@ def fit_scan_padded(
         only (``check_fusable``).  All lowerings are bit-identical on
         integer weight grids.
       t_blk: kernel time-block length (kernel lowerings only).
+      v_blk: volleys advanced per scan step; None defers to the central
+        policy ``repro.core.backend.volley_block(lowering, n)``.
 
     This entry point is deterministic — expected-mode STDP and index
     tie-break WTA need no PRNG key (that is part of the fused contract;
@@ -523,6 +861,10 @@ def fit_scan_padded(
     """
     if lowering not in LOWERINGS:
         raise ValueError(f"unknown lowering: {lowering!r}")
+    if v_blk is None:
+        from repro.core import backend  # late: backend imports this module
+
+        v_blk = backend.volley_block(lowering, xs.shape[0])
     if lowering != "reference":
         if response not in fire_responses(lowering):
             raise ValueError(
@@ -533,21 +875,36 @@ def fit_scan_padded(
         return _fit_scan_padded_kernel(
             w, xs, thresholds, t_maxes, q_actives,
             t_window, w_max, wta_k, mu_capture, mu_backoff, mu_search,
-            stabilize, epochs, lowering, t_blk,
+            stabilize, epochs, lowering, t_blk, v_blk,
         )
 
-    def volley(wc, xt):  # wc: [D, p, q]; xt: [D, p]
-        w2, _ = jax.vmap(
-            lambda wd, xd, th, tm, qa: fused_step_ref(
-                wd, xd, th, t_window, w_max, wta_k, mu_capture, mu_backoff,
-                mu_search, stabilize, t_max=tm, response=response,
-                integer_fire=True, q_active=qa,
-            )
-        )(wc, xt, thresholds, t_maxes, q_actives)
-        return w2, None
+    xsb, n_valid = _pad_volley_blocks(xs, v_blk, t_window)  # [S, v_blk, D, p]
+    kw = dict(
+        t_window=t_window, w_max=w_max, wta_k=wta_k, mu_capture=mu_capture,
+        mu_backoff=mu_backoff, mu_search=mu_search, stabilize=stabilize,
+        response=response,
+    )
+
+    def block(wc, inp):  # wc: [D, p, q]; xt_blk: [v_blk, D, p]
+        xt_blk, nv = inp
+        # the input-side step transient of the whole block at once — the
+        # reference analogue of the kernel's VMEM-resident volley block:
+        # only the cumulative weight planes, one GEMM and the plane delays
+        # stay inside the sequential (unrolled) loop
+        s = _masked_steps(
+            xt_blk, t_maxes[None, :, None], t_window
+        )  # [v_blk, D, p, T]
+        for i in range(v_blk):  # static unroll: one fused XLA body
+            valid = i < nv  # tail volleys fold nothing
+            wc = jax.vmap(
+                lambda wd, sd, xd, th, tm, qa: _block_step_ref(
+                    wd, sd, xd, th, tm, qa, valid=valid, **kw
+                )
+            )(wc, s[i], xt_blk[i], thresholds, t_maxes, q_actives)
+        return wc, None
 
     def epoch(wc, _):
-        return jax.lax.scan(volley, wc, xs)
+        return jax.lax.scan(block, wc, (xsb, n_valid))
 
     w, _ = jax.lax.scan(epoch, w, None, length=epochs)
     return w
@@ -556,16 +913,17 @@ def fit_scan_padded(
 def _fit_scan_padded_kernel(
     w, xs, thresholds, t_maxes, q_actives,
     t_window, w_max, wta_k, mu_capture, mu_backoff, mu_search,
-    stabilize, epochs, lowering, t_blk,
+    stabilize, epochs, lowering, t_blk, v_blk,
 ):
     """Kernel-lowering body of ``fit_scan_padded`` (called inside its jit).
 
     Re-pads the caller's envelope up to the Mosaic tile grid (p to a LANE
     multiple, q to a SUBLANE multiple, t_window to a ``t_blk`` multiple),
     packs the per-design scalars into the runtime SMEM operand array once,
-    and scans ``fused_step_pallas_padded`` over epochs x volleys.  Alignment
-    padding is masked exactly like caller padding: extra synapses are
-    silent, extra neurons sit above every ``q_active``.
+    and scans ``fused_block_pallas_padded`` over epochs x volley blocks —
+    each scan step is ONE kernel invocation advancing ``v_blk`` volleys.
+    Alignment padding is masked exactly like caller padding: extra synapses
+    are silent, extra neurons sit above every ``q_active``.
     """
     d, p_env, q_env = w.shape
     p_pad = _pad_to(p_env, LANE)
@@ -578,54 +936,196 @@ def _fit_scan_padded_kernel(
         .at[:, :p_env, :q_env]
         .set(w.astype(jnp.float32))
     )
-    # alignment rows reuse the caller's sentinel convention (any time >=
-    # t_window is silent for all designs)
+    # alignment rows (and block-tail volleys below) reuse the caller's
+    # sentinel convention: any time >= t_window is silent for all designs
     xs_k = _pad_volleys_silent(xs, p_pad, t_window)
+    xsb, n_valid = _pad_volley_blocks(xs_k, v_blk, float(t_window))
+    xsb = jnp.swapaxes(xsb, 1, 2)  # [S, D, v_blk, p_pad]: design axis leads
 
-    def volley(wc, xt):  # wc: [D, p_pad, q_pad]; xt: [D, p_pad]
-        w2, _ = fused_step_pallas_padded(
-            wc, xt, operands,
+    def block(wc, inp):  # wc: [D, p_pad, q_pad]; xt: [D, v_blk, p_pad]
+        xt, nv = inp
+        w2 = fused_block_pallas_padded(
+            wc, xt, operands, nv.reshape((1,)),
             t_window=t_window, w_max=w_max, wta_k=wta_k,
-            stabilize=stabilize, t_blk=t_blk,
+            stabilize=stabilize, v_blk=v_blk, t_blk=t_blk,
             interpret=lowering == "interpret",
         )
         return w2, None
 
     def epoch(wc, _):
-        return jax.lax.scan(volley, wc, xs_k)
+        return jax.lax.scan(block, wc, (xsb, n_valid))
 
     w_k, _ = jax.lax.scan(epoch, w_k, None, length=epochs)
     return w_k[:, :p_env, :q_env]
 
 
+def _fire_block_kernel(
+    scal_ref,  # [D, N_OPERANDS] f32 SMEM runtime design operands
+    t_ref,  # [1, 1, p_pad]      f32 one volley (silent >= design t_max)
+    w_ref,  # [1, p_pad, q_pad]  f32 frozen weights
+    y_out,  # [1, 1, q_pad]      f32 counts accumulator -> firing times
+    *,
+    t_blk: int,
+    n_planes: int,
+    w_max: int,
+):
+    """Batched fire body, grid = (designs, volleys, time blocks).
+
+    Inference has no sequential dependency, so instead of scanning volleys
+    on the host the whole batch rides the kernel grid: ONE ``pallas_call``
+    fires every volley of every design (the fire half of ``_fused_kernel``
+    with a volley grid axis and no WTA/STDP — assignment only needs raw
+    per-neuron firing times).
+    """
+    _, p_pad, q_pad = w_ref.shape
+    d = pl.program_id(0)
+    i = pl.program_id(2)
+    last = pl.num_programs(2) - 1
+
+    threshold = scal_ref[d, 0]
+    t_max = scal_ref[d, 1]
+    q_live = scal_ref[d, 2]
+
+    @pl.when(i == 0)
+    def _init():
+        y_out[...] = jnp.zeros_like(y_out)
+
+    wi = jnp.round(jnp.clip(w_ref[0], 0.0, float(w_max)))
+    y_out[0] += _kernel_fire_counts(
+        wi, t_ref[0].T, (i * t_blk).astype(jnp.float32), threshold, t_max,
+        t_blk=t_blk, n_planes=n_planes,
+    )
+
+    @pl.when(i == last)
+    def _finalize():
+        qi = jax.lax.broadcasted_iota(jnp.float32, (1, q_pad), 1)
+        t_fire = jnp.minimum(y_out[0], t_max)
+        y_out[0] = jnp.where(qi < q_live, t_fire, t_max)
+
+
+def _ids_from_times(t_fire, t_maxes, q_actives):
+    """Firing times [D, N, q] -> cluster ids [D, N].
+
+    The id of a volley is the earliest-firing neuron's index (index
+    tie-break — and therefore independent of ``wta_k``: the k-WTA keeps the
+    global minimum for every k >= 1), or the design's live-neuron count
+    when no neuron spikes (the 'unclustered' bucket)."""
+    tm = t_maxes.astype(jnp.float32)[:, None]
+    tf = t_fire.astype(jnp.float32)
+    spiked = (tf < tm[..., None]).any(axis=-1)
+    idx = jnp.argmin(tf, axis=-1)
+    return jnp.where(spiked, idx, q_actives[:, None]).astype(TIME_DTYPE)
+
+
 @functools.partial(
-    jax.jit, static_argnames=("t_window", "wta_k", "response")
+    jax.jit,
+    static_argnames=("t_window", "wta_k", "response", "lowering", "t_blk",
+                     "v_blk", "w_max"),
 )
 def assign_padded(
     w, xs, thresholds, t_maxes, q_actives,
     t_window: int, wta_k: int, response: str,
+    lowering: str = "reference", t_blk: int = 128,
+    v_blk: int | None = None, w_max: int | None = None,
 ):
     """Cluster ids for every padded design: [N, D, p_pad] -> [D, N].
 
-    Same envelope contract as ``fit_scan_padded``; the id of a volley is the
-    winner neuron index, or the design's live-neuron count ``q_active`` when
-    no neuron spikes (the 'unclustered' bucket)."""
+    Same envelope contract as ``fit_scan_padded``, but embarrassingly
+    parallel: no volley ever depends on another, so volleys are *batched*
+    rather than scanned.  Under the kernel lowerings the whole stream rides
+    the kernel grid — ONE ``pallas_call`` with grid (designs, volleys, time
+    blocks), no host scan at all (``w_max`` is required: the kernel fires
+    on the integer weight grid, so auto-selecting it is only a pure
+    lowering choice when the weights are on the grid — see
+    ``backend.assign_lowering``).  Under the reference lowering volleys are
+    fired in vmapped blocks of ``v_blk`` (a ``lax.map`` over blocks bounds
+    the dense transient instead of materializing it for the full stream),
+    keeping the established float-weight fire semantics bit-for-bit.
 
-    def volley(_, xt):
+    The id of a volley is the winner neuron index, or the design's
+    live-neuron count ``q_active`` when no neuron spikes (the 'unclustered'
+    bucket); it is independent of ``wta_k`` (the k-WTA keeps the global
+    minimum for every k >= 1).
+    """
+    if lowering not in LOWERINGS:
+        raise ValueError(f"unknown lowering: {lowering!r}")
+    if v_blk is None:
+        from repro.core import backend  # late: backend imports this module
+
+        v_blk = backend.volley_block(lowering, xs.shape[0])
+    n = xs.shape[0]
+    if lowering != "reference":
+        if response not in fire_responses(lowering):
+            raise ValueError(
+                f"the padded kernel lowering supports response "
+                f"{fire_responses(lowering)}, got {response!r}; use "
+                "lowering='reference'"
+            )
+        if w_max is None:
+            raise ValueError(
+                "the kernel assign lowering needs w_max (integer-grid "
+                "weight planes)"
+            )
+        d, p_env, q_env = w.shape
+        p_pad = _pad_to(p_env, LANE)
+        q_pad = _pad_to(q_env, SUBLANE)
+        t_pad = _pad_to(t_window, t_blk)
+        operands = design_operands(
+            thresholds, t_maxes, q_actives, 0.0, 0.0, 0.0
+        )
+        w_k = (
+            jnp.zeros((d, p_pad, q_pad), jnp.float32)
+            .at[:, :p_env, :q_env]
+            .set(w.astype(jnp.float32))
+        )
+        xs_k = jnp.swapaxes(
+            _pad_volleys_silent(xs, p_pad, t_window), 0, 1
+        )  # [D, N, p_pad]
+        kern = functools.partial(
+            _fire_block_kernel,
+            t_blk=t_blk, n_planes=w_max + 1, w_max=w_max,
+        )
+        t_fire = pl.pallas_call(
+            kern,
+            grid=(d, n, t_pad // t_blk),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.SMEM),
+                pl.BlockSpec((1, 1, p_pad), lambda di, vi, ti: (di, vi, 0)),
+                pl.BlockSpec(
+                    (1, p_pad, q_pad), lambda di, vi, ti: (di, 0, 0)
+                ),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, q_pad), lambda di, vi, ti: (di, vi, 0)
+            ),
+            out_shape=jax.ShapeDtypeStruct((d, n, q_pad), jnp.float32),
+            interpret=lowering == "interpret",
+        )(operands, xs_k, w_k)
+        return _ids_from_times(t_fire[:, :, :q_env], t_maxes, q_actives)
+
+    qi = jnp.arange(w.shape[2], dtype=TIME_DTYPE)
+    # tail rows are sliced away below, so the valid counts are unused here
+    xsb, _ = _pad_volley_blocks(xs, v_blk, t_window)  # [S, v_blk, D, p]
+
+    def block(xt_blk):  # [v_blk, D, p] -> [v_blk, D, q]
         def one(wd, xd, th, tm, qa):
+            # float-weight dense fire: the established assignment
+            # arithmetic, volley for volley (only the batching is new)
             t = fire_dense_ref(
                 wd, xd, th, t_window, t_max=tm, response=response
             )
-            qi = jnp.arange(wd.shape[1], dtype=TIME_DTYPE)
-            t = jnp.where(qi < qa, t, tm)
-            y = ref.wta_ref(t[None], wta_k, tm)[0]
-            spiked = (y < tm).any()
-            return jnp.where(spiked, jnp.argmin(y), qa).astype(TIME_DTYPE)
+            return jnp.where(qi < qa, t, tm)
 
-        return 0, jax.vmap(one)(w, xt, thresholds, t_maxes, q_actives)
+        return jax.vmap(  # volleys in the block
+            jax.vmap(one, in_axes=(0, 0, 0, 0, 0)),  # designs
+            in_axes=(None, 0, None, None, None),
+        )(w, xt_blk, thresholds, t_maxes, q_actives)
 
-    _, asg = jax.lax.scan(volley, 0, xs)  # [N, D]
-    return asg.T
+    t_all = jax.lax.map(block, xsb)  # [S, v_blk, D, q]
+    t_all = t_all.reshape((-1,) + t_all.shape[2:])[:n]  # [N, D, q]
+    return _ids_from_times(
+        jnp.moveaxis(t_all, 0, 1), t_maxes, q_actives
+    )
 
 
 def fit_fused(
