@@ -2,63 +2,43 @@
 
     PYTHONPATH=src python examples/design_nspu.py
 
-Sweeps column geometry (q neurons) and gamma window for a target sensory
-stream, evaluates clustering quality in the functional simulator, then
-takes the best design through the hardware generator and compares the
-silicon cost of all candidates via forecasting — the "rapid application
-exploration" loop TNNGen §II-A describes.  A multi-layer variant of the
-winning column (two fully-connected columns feeding a read-out column)
-runs through the same clustering loop via
+Explores column geometry (q neurons), gamma window and firing threshold
+for a target sensory stream via ``repro.dse.explore``: the candidates are
+envelope-bucketed under the central waste cap (so small designs never pay
+a big design's padding every volley), each bucket trains as ONE compiled
+volley-blocked scan with the design axis sharded across local devices
+where a mesh exists, and every design's clustering quality is paired with
+*forecasted* post-layout area/leakage (paper §III-D) into a Pareto
+frontier — the "rapid application exploration" loop TNNGen §II-A
+describes, closed without an EDA run.  The selected design then goes
+through the hardware generator to check the forecast, and a multi-layer
+variant runs through the same clustering loop via
 ``simulator.cluster_time_series_network``.
 """
 import tempfile
 
-import numpy as np
-
-from repro.clustering.metrics import rand_index
+from repro import dse
 from repro.core import simulator
-from repro.core.types import (
-    ColumnConfig, LayerConfig, NetworkConfig, NeuronConfig,
-)
+from repro.core.types import ColumnConfig, LayerConfig, NetworkConfig
 from repro.data import ucr
 from repro.hwgen import run_flow
-from repro.hwgen.forecast import PaperForecaster
 from repro.hwgen.rtl import ColumnSpec
 
 BENCH = "Beef"  # 470-sample food spectrographs, 5 classes
 
 ds = ucr.load(BENCH)
 L, k = ds.x.shape[1], ds.n_classes
-fc = PaperForecaster()
 
-# All candidate designs are padded into one (p, q, t_max) envelope and
-# trained as ONE compiled program — per-design threshold/window/live-q ride
-# as runtime operands, so the whole heterogeneous sweep is one trace (the
-# Mosaic kernel on TPU, its jnp reference body elsewhere; the result
-# records which lowering actually ran on this host).
-cfgs = []
-for q in (k, 2 * k):
-    for t_max in (32, 64):
-        cfg = ColumnConfig(p=L, q=q, t_max=t_max)
-        cfgs.append(cfg.with_threshold(simulator.suggest_threshold(cfg)))
-sweep = simulator.cluster_time_series_many(ds.x[:120], ds.y[:120], cfgs, epochs=3)
-print(f"swept {len(cfgs)} designs in one compiled program "
-      f"({sweep[0].train_seconds:.2f}s total, "
-      f"lowering={sweep[0].lowering!r})")
+space = dse.DesignSpace(q=(k, 2 * k), t_max=(32, 64))
+res = dse.explore(ds.x[:120], ds.y[:120], space, epochs=3)
+print(dse.summarize(res))
 
-candidates = []
-for cfg, res in zip(cfgs, sweep):
-    syn = L * cfg.q
-    candidates.append({
-        "q": cfg.q, "t_max": cfg.t_max, "ri": res.rand_index, "synapses": syn,
-        "fc_area_um2": fc.area_um2(syn), "fc_leak_uw": fc.leakage_uw(syn),
-    })
-    print(f"q={cfg.q:2d} t_max={cfg.t_max:3d}: RI={res.rand_index:.3f} "
-          f"synapses={syn}  forecast area={fc.area_um2(syn):8.0f} um^2 "
-          f"leak={fc.leakage_uw(syn):6.2f} uW")
-
-# quality per silicon area — the NSPU design objective
-best = max(candidates, key=lambda c: c["ri"] / c["fc_area_um2"])
+# quality per forecasted silicon area — the NSPU design objective
+bp = res.best()
+best = {
+    "q": bp.cfg.q, "t_max": bp.cfg.t_max, "ri": bp.rand_index,
+    "fc_area_um2": bp.area_um2,
+}
 print(f"\nselected design: q={best['q']} t_max={best['t_max']} "
       f"(RI {best['ri']:.3f}, forecast {best['fc_area_um2']:.0f} um^2)")
 

@@ -39,10 +39,11 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core import neuron, stdp, wta
 from repro.core.types import ColumnConfig, TIME_DTYPE
@@ -119,16 +120,124 @@ def assign_lowering(response: str, w) -> str:
     after integer-mu, unstabilized training from integer init, checked
     concretely here — and a semantic switch otherwise, so off-grid weights
     always take the reference body, on every host.  ``w`` must be a
-    concrete array (call this outside jit); tracers fall back to
-    'reference'.
+    concrete array (call this outside jit); abstract values (tracers)
+    fall back to 'reference'.
     """
     low = padded_lowering(response)
     if low == "reference":
         return low
-    if isinstance(w, jax.core.Tracer):
+    try:
+        # concreteness probe: under a trace this bool() raises instead of
+        # answering, which is exactly the "not concrete" signal we need —
+        # no reliance on tracer internals
+        on_grid = bool(jnp.all(w == jnp.round(w)))
+    except jax.errors.ConcretizationTypeError:
         return "reference"
-    on_grid = bool(jnp.all(w == jnp.round(w)))
     return low if on_grid else "reference"
+
+
+# ---------------------------------------------------- bucket / shard policy
+# A design joins a shared padding envelope only while padding inflates no
+# member's per-volley fire volume (p * q * t_max) beyond this factor:
+# sharing one compiled step saves a one-time compilation, but padded FLOPs
+# recur every volley of every fit, so a tiny design must never ride a huge
+# design's envelope.  Shared by heterogeneous design sweeps
+# (``simulator.cluster_time_series_many``) and network layer grouping
+# (``network._fused_envelopes``).
+ENVELOPE_WASTE_CAP = 4.0
+
+
+def envelope_buckets(
+    shapes: Sequence[tuple[int, int, int]],
+    waste_cap: Optional[float] = None,
+    max_bucket: Optional[int] = None,
+) -> list[tuple[tuple[int, int, int], list[int]]]:
+    """Pack (p, q, t_max) design shapes into shared padding envelopes.
+
+    Members pack greedily (largest fire volume first) into buckets whose
+    envelope is the elementwise max of its members' shapes, subject to two
+    caps:
+
+    * ``waste_cap`` (None -> ``ENVELOPE_WASTE_CAP``): the envelope volume
+      must stay within this factor of every member's true volume —
+      size-compatible designs share one compiled scan, badly mismatched
+      ones get their own envelope (and their own, cheap, compilation).
+    * ``max_bucket`` (None -> unbounded): upper bound on designs per
+      bucket.  Bounds the working set of one compiled sweep (the padded
+      volley/assignment buffers scale with the bucket's design axis) and
+      keeps the design axis shard-friendly.  Buckets whose envelope
+      shapes AND member counts coincide (e.g. same-shape designs split
+      into full ``max_bucket`` groups) share one compiled trace via the
+      ordinary jit cache; an unequal-sized tail bucket is its own trace.
+
+    Returns ``[(envelope, member_indices), ...]``; every input index
+    appears in exactly one bucket.  Bucketing never changes results — each
+    design's padded scan is bit-identical under any envelope that contains
+    it (the padding contract in ``docs/kernels.md``).
+    """
+    if waste_cap is None:
+        waste_cap = ENVELOPE_WASTE_CAP
+    vols = [p * q * t for (p, q, t) in shapes]
+    order = sorted(range(len(shapes)), key=lambda i: -vols[i])
+    buckets: list[tuple[tuple[int, int, int], list[int]]] = []
+    for i in order:
+        p, q, t = shapes[i]
+        placed = False
+        for bi, (env, members) in enumerate(buckets):
+            if max_bucket is not None and len(members) >= max_bucket:
+                continue
+            cand = (max(env[0], p), max(env[1], q), max(env[2], t))
+            vol = cand[0] * cand[1] * cand[2]
+            if all(vol <= waste_cap * vols[m] for m in members + [i]):
+                buckets[bi] = (cand, members + [i])
+                placed = True
+                break
+        if not placed:
+            buckets.append(((p, q, t), [i]))
+    return buckets
+
+
+DESIGN_AXIS = "design"
+
+
+def design_shards(d: int) -> int:
+    """Shard count policy for a design axis of length ``d``.
+
+    The largest divisor of ``d`` that fits the local device count — the
+    design axis of a padded sweep is embarrassingly parallel (every
+    design's fire/WTA/STDP is independent), so it shards with no
+    collectives at all.  1 on a single-device host or when nothing
+    divides: the single-device fallback is simply "no sharding".
+    """
+    n_dev = jax.local_device_count()
+    k = min(int(d), n_dev)
+    while k > 1 and d % k:
+        k -= 1
+    return max(k, 1)
+
+
+def design_mesh(d: int):
+    """1-D device mesh over ``DESIGN_AXIS`` for a design axis of length
+    ``d``, or None on a single device / when ``d`` has no usable divisor
+    (the clean single-device fallback — callers treat None as 'leave the
+    arrays where they are')."""
+    k = design_shards(d)
+    if k <= 1:
+        return None
+    return jax.make_mesh((k,), (DESIGN_AXIS,))
+
+
+def shard_design_axis(mesh, x: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
+    """Place ``x`` with dimension ``axis`` sharded over ``mesh``'s design
+    axis (no-op when ``mesh`` is None).  Sharding the operands is all it
+    takes: the padded scans are jitted, so GSPMD propagates the design
+    partitioning through the whole fit/assign program — per-design
+    arithmetic is untouched and results stay bit-identical to the
+    unsharded run."""
+    if mesh is None:
+        return x
+    spec = PartitionSpec(*((None,) * axis + (DESIGN_AXIS,)))
+    return jax.device_put(x, NamedSharding(mesh, spec))
 
 
 # ------------------------------------------------------------- generic fit

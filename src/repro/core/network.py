@@ -20,7 +20,7 @@ donated ``lax.scan``:
 * layers that resolve to 'pallas' share the padded-envelope fused scan of
   ``repro.kernels.fused_column.fit_scan_padded`` — fused layers that can
   share a compiled step (same column count and static hyper-parameters,
-  sizes within ``_ENVELOPE_WASTE_CAP`` of each other) are padded into one
+  sizes within ``backend.ENVELOPE_WASTE_CAP`` of each other) are padded into one
   (p, q, t_max) envelope and the fused column step runs over the layer's
   columns axis, so heterogeneous layers reuse one compiled step when close
   enough in size that padding compute stays bounded (at most one
@@ -202,56 +202,31 @@ def _fused_group_key(layer: LayerConfig):
     return (layer.columns, c.neuron.w_max, c.neuron.response, c.wta.k, c.stdp)
 
 
-# A layer joins a shared envelope only while padding inflates no member's
-# per-volley fire volume (p * q * t_max) beyond this factor: sharing one
-# compiled step saves a one-time compilation, padded FLOPs recur every
-# volley of every fit, so a tiny layer must never ride a huge layer's
-# envelope.
-_ENVELOPE_WASTE_CAP = 4.0
-
-
-def _volume(layer: LayerConfig) -> int:
-    c = layer.column
-    return c.p * c.q * c.t_max
-
-
 def _fused_envelopes(
     layers: list[LayerConfig],
 ) -> list[tuple[int, int, int]]:
     """Per-layer (p, q, t_window) padding envelope, in input order.
 
     Layers group by ``_fused_group_key``; within a group, members pack
-    greedily (largest first) into shared envelopes subject to
-    ``_ENVELOPE_WASTE_CAP`` — size-compatible heterogeneous layers share
-    one compiled step, badly mismatched ones get their own envelope.
+    into shared envelopes via the central bucket policy
+    (``backend.envelope_buckets``, greedy largest-first under
+    ``backend.ENVELOPE_WASTE_CAP``) — size-compatible heterogeneous layers
+    share one compiled step, badly mismatched ones get their own envelope.
+    The same policy buckets heterogeneous design sweeps in
+    ``simulator.cluster_time_series_many``.
     """
     by_key: dict[tuple, list[int]] = {}
     for i, l in enumerate(layers):
         by_key.setdefault(_fused_group_key(l), []).append(i)
     envs: list = [None] * len(layers)
     for idxs in by_key.values():
-        idxs = sorted(idxs, key=lambda i: -_volume(layers[i]))
-        groups: list[tuple[tuple[int, int, int], list[int]]] = []
-        for i in idxs:
-            c = layers[i].column
-            placed = False
-            for gi, (env, members) in enumerate(groups):
-                cand = (
-                    max(env[0], c.p), max(env[1], c.q), max(env[2], c.t_max)
-                )
-                vol = cand[0] * cand[1] * cand[2]
-                if all(
-                    vol <= _ENVELOPE_WASTE_CAP * _volume(layers[m])
-                    for m in members + [i]
-                ):
-                    groups[gi] = (cand, members + [i])
-                    placed = True
-                    break
-            if not placed:
-                groups.append(((c.p, c.q, c.t_max), [i]))
-        for env, members in groups:
+        shapes = [
+            (layers[i].column.p, layers[i].column.q, layers[i].column.t_max)
+            for i in idxs
+        ]
+        for env, members in backend_lib.envelope_buckets(shapes):
             for m in members:
-                envs[m] = env
+                envs[idxs[m]] = env
     return envs
 
 

@@ -17,13 +17,16 @@ multi-layer networks:
 Three clustering front-ends share the loop:
 
 * ``cluster_time_series`` — one column design, one stream.
-* ``cluster_time_series_many`` — a whole *design sweep* as ONE compiled
-  program: every design is padded into a shared (p, q, t_max) envelope and
-  the fused training step runs over the design axis (threshold / window /
-  live-neuron count become traced per-design scalars), advancing
-  ``backend.volley_block`` volleys per scan step; assignment batches the
-  whole stream instead of scanning it.  The padded scans live in
-  ``repro.kernels.fused_column``.
+* ``cluster_time_series_many`` — a whole *design sweep*, envelope-bucketed:
+  designs partition into shared (p, q, t_max) padding envelopes under the
+  central waste cap (``backend.envelope_buckets``), each bucket runs as ONE
+  compiled program with the fused training step over the design axis
+  (threshold / window / live-neuron count become traced per-design
+  scalars), advancing ``backend.volley_block`` volleys per scan step, the
+  design axis sharded across local devices where ``backend.design_mesh``
+  finds one; assignment batches the whole stream instead of scanning it.
+  The padded scans live in ``repro.kernels.fused_column``.  This is the
+  engine ``repro.dse.explore`` drives for design-space exploration.
 * ``cluster_time_series_network`` — a multi-layer ``NetworkConfig`` design
   through the same encode -> fit -> assign -> rand-index loop, trained
   greedily layer-by-layer via ``network.fit_greedy`` (each layer one jitted
@@ -50,6 +53,12 @@ from repro.kernels import fused_column
 class ClusteringResult:
     assignments: np.ndarray  # [N] cluster ids (q == unclustered)
     rand_index: float
+    # Trained parameters, one dict shape across every front-end so
+    # downstream consumers (forecaster features, examples, DSE) can rely
+    # on it: single-column front-ends (``cluster_time_series`` and each
+    # sweep member of ``cluster_time_series_many``) return ``{'w': [p, q]}``
+    # cropped to the design's true size; the network front-end returns
+    # ``{'layers': [{'w': [columns, p, q]}, ...]}``.
     params: dict
     train_seconds: float
     mode: str
@@ -59,6 +68,11 @@ class ClusteringResult:
     # layers mixed lowerings (e.g. 'mosaic,reference' for RNL + SNL layers
     # on TPU).
     lowering: str = ""
+    # Sweep metadata (``cluster_time_series_many``): how many envelope
+    # buckets the sweep split into, and how many devices this design's
+    # bucket sharded its design axis across (1 = single-device fallback).
+    buckets: int = 1
+    shards: int = 1
 
 
 def suggest_threshold(cfg: ColumnConfig) -> float:
@@ -149,6 +163,98 @@ def cluster_time_series(
 
 
 # --------------------------------------------------- batched design sweep
+def _sweep_bucket(
+    cfgs: Sequence[ColumnConfig],
+    idxs: Sequence[int],
+    envelope: tuple[int, int, int],
+    enc: Sequence[jnp.ndarray],
+    w_init: Sequence[np.ndarray],
+    epochs: int,
+    lowering: str,
+) -> tuple[np.ndarray, list[jnp.ndarray], int]:
+    """Train + assign one envelope bucket of a design sweep.
+
+    Pads the bucket's members into its shared (p_env, q_env, t_window)
+    envelope, shards the design axis across local devices when the central
+    policy finds a mesh (``backend.design_mesh``; None = single-device
+    fallback, arrays stay put), and drives one volley-blocked
+    ``fit_scan_padded`` plus one batched ``assign_padded``.  Buckets with
+    equal envelope shapes and member counts hit the same jit cache entry —
+    trace sharing across buckets comes for free from the padding contract.
+
+    Returns (assignments [Db, N], cropped per-design weights, shard count).
+    """
+    c0 = cfgs[idxs[0]]
+    p_env, q_env, t_window = envelope
+    db = len(idxs)
+    n = enc[idxs[0]].shape[0]
+
+    # Stack padded volleys [Db, N, p_env] in ONE shot: the members' encodes
+    # are stacked and the whole [Db, N, p] block lands in the silent-padded
+    # buffer with a single set — no per-design ``.at[i].set`` dispatch
+    # chain, O(1) graph nodes however many designs ride the bucket.
+    # (Designs currently share p — the encoder pins it — so the stack is
+    # uniform; the single set keeps the p < p_env envelope case working
+    # should a future per-design front-end relax that.)
+    encb = jnp.stack([enc[i] for i in idxs])  # [Db, N, p]
+    xs = jnp.full((db, n, p_env), t_window, TIME_DTYPE)
+    xs = xs.at[:, :, : encb.shape[-1]].set(encb)
+    xs = jnp.swapaxes(xs, 0, 1)  # scan axis leading: [N, Db, p_env]
+
+    # Per-design init draws stay per-(key, shape) — seed semantics — but
+    # the padded stack is assembled host-side and shipped as ONE buffer
+    # instead of a D-deep ``.at[i].set`` graph.
+    w0_np = np.zeros((db, p_env, q_env), np.float32)
+    for j, i in enumerate(idxs):
+        c = cfgs[i]
+        w0_np[j, : c.p, : c.q] = w_init[i]
+    w0 = jnp.asarray(w0_np)
+    thresholds = jnp.asarray(
+        [cfgs[i].neuron.threshold for i in idxs], jnp.float32
+    )
+    t_maxes = jnp.asarray([cfgs[i].t_max for i in idxs], TIME_DTYPE)
+    q_actives = jnp.asarray([cfgs[i].q for i in idxs], TIME_DTYPE)
+
+    # shard the design axis across local devices: per-design work is
+    # independent, so GSPMD splits the jitted scans with no collectives;
+    # mesh=None (single device / indivisible Db) leaves every array put.
+    mesh = backend_lib.design_mesh(db)
+    shards = backend_lib.design_shards(db) if mesh is not None else 1
+    w0 = backend_lib.shard_design_axis(mesh, w0, axis=0)
+    xs = backend_lib.shard_design_axis(mesh, xs, axis=1)
+    thresholds = backend_lib.shard_design_axis(mesh, thresholds)
+    t_maxes = backend_lib.shard_design_axis(mesh, t_maxes)
+    q_actives = backend_lib.shard_design_axis(mesh, q_actives)
+
+    w = fused_column.fit_scan_padded(
+        w0, xs, thresholds, t_maxes, q_actives,
+        t_window=t_window, w_max=c0.neuron.w_max, wta_k=c0.wta.k,
+        mu_capture=c0.stdp.mu_capture, mu_backoff=c0.stdp.mu_backoff,
+        mu_search=c0.stdp.mu_search,
+        stabilize=c0.stdp.stabilizer == "half",
+        response=c0.neuron.response, epochs=epochs, lowering=lowering,
+        # v_blk defaults to the central backend.volley_block policy
+    )
+    # assignment batches volleys (kernel grid / vmapped blocks); the kernel
+    # fires on the integer weight grid, so it is only auto-selected when
+    # the trained weights concretely sit on that grid (pure lowering
+    # choice) — float weights keep the reference fire on every host.
+    asg_lowering = backend_lib.assign_lowering(c0.neuron.response, w)
+    asg = np.asarray(
+        fused_column.assign_padded(
+            w, xs, thresholds, t_maxes, q_actives,
+            t_window=t_window, wta_k=c0.wta.k,
+            response=c0.neuron.response, lowering=asg_lowering,
+            w_max=c0.neuron.w_max,
+        )
+    )
+    w_out = [
+        jnp.asarray(w[j, : cfgs[i].p, : cfgs[i].q])
+        for j, i in enumerate(idxs)
+    ]
+    return asg, w_out, shards
+
+
 def cluster_time_series_many(
     series: np.ndarray,
     labels: Optional[np.ndarray],
@@ -156,33 +262,55 @@ def cluster_time_series_many(
     epochs: int = 8,
     seed: int = 0,
     encoder: str = "latency",
+    waste_cap: Optional[float] = None,
+    max_bucket: Optional[int] = None,
 ) -> list[ClusteringResult]:
-    """Sweep several column designs over one stream as ONE compiled program.
+    """Sweep several column designs over one stream, envelope-bucketed.
 
-    Every design is padded into the shared (max p, max q, max t_max)
-    envelope; per-design threshold / window / live-neuron count become
-    traced scalars — runtime SMEM operands of the Mosaic kernel on TPU,
-    ``vmap``-ed operands of the reference body elsewhere
-    (``backend.padded_lowering`` picks) — and the whole sweep is a single
+    Designs are partitioned into **envelope buckets** by the central
+    policy ``backend.envelope_buckets``: members pack into a shared
+    (p, q, t_max) padding envelope while padding keeps every member's
+    per-volley fire volume within ``waste_cap`` (default
+    ``backend.ENVELOPE_WASTE_CAP``) of its true volume — so a 5-neuron
+    design never pays a 96-neuron design's padding on every volley.  Each
+    bucket runs as ONE compiled program: per-design threshold / window /
+    live-neuron count become traced scalars — runtime SMEM operands of the
+    Mosaic kernel on TPU, ``vmap``-ed operands of the reference body
+    elsewhere (``backend.padded_lowering`` picks) — driving a single
     jitted volley-blocked scan (``backend.volley_block`` volleys folded
-    per step) plus one batched assignment pass, compiled ONCE per
-    envelope shape, never per design.
+    per step) plus one batched assignment pass.  Compilation cost is one
+    trace per distinct bucket (envelope shape, member count) pair:
+    buckets agreeing on both — e.g. same-shape designs split into full
+    ``max_bucket`` groups — share one trace, and bucketing never changes
+    results: every design trains bit-identically under any envelope that
+    contains it, including the old single-global-envelope sweep
+    (``waste_cap=float('inf')`` reproduces that exactly).
+
+    Each bucket's design axis is **sharded across local devices** when the
+    central shard policy finds a usable mesh (``backend.design_mesh``;
+    per-design work is embarrassingly parallel, so GSPMD splits the scans
+    with no collectives).  Single-device hosts fall back to the unsharded
+    path with identical results; the shard count rides on
+    ``ClusteringResult.shards``.
 
     This front-end always trains on the fused path (there is no ``mode``
     knob): every design must fit the fused contract — expected-mode STDP,
     index tie-break WTA, and a response the selected lowering supports —
     or the sweep raises up front.  The fused path is deterministic, so
-    ``seed`` only feeds weight initialization; equal seeds reproduce the
-    sweep bit-for-bit on every host.
+    ``seed`` only feeds weight initialization — split per design BEFORE
+    bucketing, so equal seeds reproduce the sweep bit-for-bit on every
+    host under every bucketing/sharding.  An empty stream (N=0) raises a
+    ValueError up front; ``epochs=0`` is well-defined and returns the
+    designs' init weights with assignments from those weights.
 
     Designs must share the response function, STDP rule, WTA config and
     w_max (they are compile-time constants of the fused step); q, t_max and
     threshold may vary freely.  p is pinned by the encoder — every design
     sees the same stream, so ``cfg.p`` must equal the encoded width for all
-    of them (the padding machinery itself handles unequal p, should a
-    future per-design front-end need it).  ``train_seconds`` on every
-    result is the wall time of the whole batched sweep, not a per-design
-    share; ``lowering`` records the lowering that actually ran.
+    of them.  ``train_seconds`` on every result is the wall time of the
+    whole sweep (all buckets), not a per-design share; ``lowering`` records
+    the lowering that ran, ``buckets``/``shards`` the bucket count and the
+    design's bucket shard count.
 
     Returns one ClusteringResult per config, in input order.
     """
@@ -207,63 +335,42 @@ def cluster_time_series_many(
             )
 
     x = jnp.asarray(series)
-    n = x.shape[0]
-    p_max = max(c.p for c in cfgs)
-    q_max = max(c.q for c in cfgs)
-    t_window = max(c.t_max for c in cfgs)
+    if x.shape[0] == 0:
+        raise ValueError(
+            "cluster_time_series_many needs a non-empty stream (got N=0 "
+            "series)"
+        )
     d = len(cfgs)
 
-    # Stack padded volleys [D, N, p_max] in ONE shot: every design's encode
-    # is stacked and the whole [D, N, p] block lands in the silent-padded
-    # buffer with a single set — no per-design ``.at[i].set`` dispatch
-    # chain, O(1) graph nodes however many designs ride the sweep.
-    # (Designs currently share p — the encoder pins it — so the stack is
-    # uniform; the single set keeps the p < p_max envelope case working
-    # should a future front-end relax that.)
-    enc = jnp.stack([_encode(x, c, encoder) for c in cfgs])  # [D, N, p]
-    xs = jnp.full((d, n, p_max), t_window, TIME_DTYPE)
-    xs = xs.at[:, :, : enc.shape[-1]].set(enc)
-    xs = jnp.swapaxes(xs, 0, 1)  # scan axis leading: [N, D, p_max]
-
+    # Encode + init per design BEFORE bucketing: the per-design PRNG key
+    # assignment (and with it every result) is a function of the input
+    # order alone, never of how designs were bucketed.
+    enc = [_encode(x, c, encoder) for c in cfgs]  # D x [N, p]
     rng = jax.random.key(seed)
     rng, init_key = jax.random.split(rng)
     keys = jax.random.split(init_key, d)
-    # Per-design init draws stay per-(key, shape) — seed semantics — but
-    # the padded stack is assembled host-side and shipped as ONE buffer
-    # instead of a D-deep ``.at[i].set`` graph.
-    w0_np = np.zeros((d, p_max, q_max), np.float32)
-    for i, (k, c) in enumerate(zip(keys, cfgs)):
-        w0_np[i, : c.p, : c.q] = np.asarray(
-            column_lib.init_params(k, c)["w"]
-        )
-    w0 = jnp.asarray(w0_np)
-    thresholds = jnp.asarray([c.neuron.threshold for c in cfgs], jnp.float32)
-    t_maxes = jnp.asarray([c.t_max for c in cfgs], TIME_DTYPE)
-    q_actives = jnp.asarray([c.q for c in cfgs], TIME_DTYPE)
+    w_init = [
+        np.asarray(column_lib.init_params(k, c)["w"])
+        for k, c in zip(keys, cfgs)
+    ]
 
+    buckets = backend_lib.envelope_buckets(
+        [(c.p, c.q, c.t_max) for c in cfgs],
+        waste_cap=waste_cap, max_bucket=max_bucket,
+    )
+
+    asg = [None] * d
+    w_out = [None] * d
+    shard_of = [1] * d
     t0 = time.perf_counter()
-    w = fused_column.fit_scan_padded(
-        w0, xs, thresholds, t_maxes, q_actives,
-        t_window=t_window, w_max=c0.neuron.w_max, wta_k=c0.wta.k,
-        mu_capture=c0.stdp.mu_capture, mu_backoff=c0.stdp.mu_backoff,
-        mu_search=c0.stdp.mu_search,
-        stabilize=c0.stdp.stabilizer == "half",
-        response=c0.neuron.response, epochs=epochs, lowering=lowering,
-        # v_blk defaults to the central backend.volley_block policy
-    )
-    # assignment batches volleys (kernel grid / vmapped blocks); the kernel
-    # fires on the integer weight grid, so it is only auto-selected when
-    # the trained weights concretely sit on that grid (pure lowering
-    # choice) — float weights keep the reference fire on every host.
-    asg_lowering = backend_lib.assign_lowering(c0.neuron.response, w)
-    asg = np.asarray(
-        fused_column.assign_padded(
-            w, xs, thresholds, t_maxes, q_actives,
-            t_window=t_window, wta_k=c0.wta.k,
-            response=c0.neuron.response, lowering=asg_lowering,
-            w_max=c0.neuron.w_max,
+    for envelope, idxs in buckets:
+        asg_b, w_b, shards = _sweep_bucket(
+            cfgs, idxs, envelope, enc, w_init, epochs, lowering
         )
-    )
+        for j, i in enumerate(idxs):
+            asg[i] = asg_b[j]
+            w_out[i] = w_b[j]
+            shard_of[i] = shards
     train_seconds = time.perf_counter() - t0
 
     results = []
@@ -271,10 +378,10 @@ def cluster_time_series_many(
         ri = float("nan")
         if labels is not None:
             ri = float(rand_index_fn(np.asarray(labels), asg[i]))
-        params = {"w": jnp.asarray(w[i, : c.p, : c.q])}
         results.append(
             ClusteringResult(
-                asg[i], ri, params, train_seconds, "pallas", lowering
+                asg[i], ri, {"w": w_out[i]}, train_seconds, "pallas",
+                lowering, buckets=len(buckets), shards=shard_of[i],
             )
         )
     return results
@@ -342,5 +449,8 @@ def cluster_time_series_network(
     # '' when no layer trained fused; comma-joined when fused layers mixed
     # lowerings (e.g. RNL on the Mosaic kernel + SNL on the reference body)
     return ClusteringResult(
-        assignments, ri, params, train_seconds, mode, ",".join(sorted(lows))
+        # unified params contract (see ClusteringResult): always a dict —
+        # the per-layer param list rides under 'layers'
+        assignments, ri, {"layers": params}, train_seconds, mode,
+        ",".join(sorted(lows)),
     )

@@ -1,0 +1,29 @@
+"""Design-space exploration (DSE) for NSPU column designs.
+
+Closes the TNNGen loop from functional simulation to *forecasted*
+silicon: ``explore`` sweeps a ``DesignSpace`` over a labeled stream via
+the envelope-bucketed, device-sharded design sweep
+(``simulator.cluster_time_series_many``), pairs every design's Rand
+index with forecasted area/leakage (``repro.hwgen.forecast``), and
+returns the Pareto frontier of quality vs silicon cost.  See
+``docs/dse.md``.
+"""
+from repro.dse.explore import DSEResult, explore, summarize
+from repro.dse.pareto import DesignPoint, dominates, pareto_front
+from repro.dse.space import (
+    Candidate,
+    DesignSpace,
+    candidate_config,
+)
+
+__all__ = [
+    "Candidate",
+    "DSEResult",
+    "DesignPoint",
+    "DesignSpace",
+    "candidate_config",
+    "dominates",
+    "explore",
+    "pareto_front",
+    "summarize",
+]

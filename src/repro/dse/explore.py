@@ -1,0 +1,176 @@
+"""Design-space exploration: bucketed sweep -> silicon forecast -> Pareto.
+
+This is the paper's headline loop closed end to end: grid or random
+search over (q, t_max, threshold, encoder) runs through the functional
+simulator's envelope-bucketed, device-sharded design sweep
+(``simulator.cluster_time_series_many``), each design's clustering
+quality is paired with forecasted post-layout area/leakage from its
+synapse count (``repro.hwgen.forecast`` — the TNN7 regression by
+default), and the result is a Pareto frontier of Rand index vs silicon
+cost — no hardware flow run required.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import simulator
+from repro.dse.pareto import DesignPoint, pareto_front
+from repro.dse.space import Candidate, DesignSpace, candidate_config
+
+
+@dataclasses.dataclass
+class DSEResult:
+    """Outcome of one exploration run.
+
+    ``points`` holds every evaluated candidate in explore order;
+    ``pareto`` the nondominated subset (Rand index up, forecasted area
+    and leakage down), cheapest-area first.  ``meta`` records how the
+    sweep executed: per-encoder bucket counts, shard counts, the lowering
+    that ran, and the candidate count.
+    """
+
+    points: list[DesignPoint]
+    pareto: list[DesignPoint]
+    seconds: float
+    meta: dict
+
+    def best(self) -> DesignPoint:
+        """Highest Rand index per forecasted area — the NSPU design
+        objective the example sweeps optimize."""
+        if not self.pareto:
+            raise ValueError("no Pareto points (unlabeled stream?)")
+        return max(self.pareto, key=lambda p: p.rand_index / p.area_um2)
+
+
+def explore(
+    series: np.ndarray,
+    labels: Optional[np.ndarray],
+    space: DesignSpace,
+    epochs: int = 4,
+    search: str = "grid",
+    budget: Optional[int] = None,
+    seed: int = 0,
+    forecaster=None,
+    waste_cap: Optional[float] = None,
+    max_bucket: Optional[int] = None,
+) -> DSEResult:
+    """Explore a column design space over one stream, silicon-forecasted.
+
+    Args:
+      series: [N, L] real-valued stream (N >= 1; an empty stream raises).
+      labels: [N] ground-truth classes; required — the Pareto frontier
+        ranks on the Rand index, which needs labels.
+      space: the axes to search (see ``DesignSpace``).
+      epochs: STDP passes per design.
+      search: 'grid' (the full cross product) or 'random' (``budget``
+        uniform draws from it, deterministic per ``seed``).
+      budget: candidate cap; required for 'random', optional for 'grid'
+        (truncates the deterministic grid order).
+      seed: feeds both candidate sampling and per-design weight init,
+        so equal seeds reproduce the exploration exactly.
+      forecaster: any object with ``area_um2(synapses)`` /
+        ``leakage_uw(synapses)`` — ``hwgen.forecast.PaperForecaster``
+        (TNN7 regression) by default; pass a refit
+        ``hwgen.forecast.Forecaster`` to use an accumulated design
+        database instead.
+      waste_cap / max_bucket: envelope-bucketing knobs forwarded to
+        ``cluster_time_series_many`` (None defers to central policy).
+
+    Candidates sharing an encoder sweep together (the encoder pins the
+    input width); within each encoder group the sweep is envelope-bucketed
+    and design-sharded by the central backend policy.
+
+    Returns a ``DSEResult`` whose ``pareto`` pairs each surviving design's
+    Rand index with its forecasted area/leakage.
+    """
+    if labels is None:
+        raise ValueError(
+            "explore ranks designs on the Rand index; labels are required"
+        )
+    if forecaster is None:
+        from repro.hwgen.forecast import PaperForecaster
+
+        forecaster = PaperForecaster()
+
+    if search == "grid":
+        candidates = space.grid()
+        if budget is not None:
+            candidates = candidates[: int(budget)]
+    elif search == "random":
+        if budget is None:
+            raise ValueError("search='random' needs a candidate budget")
+        candidates = space.sample(budget, seed=seed)
+    else:
+        raise ValueError(f"unknown search: {search!r} (grid | random)")
+
+    series = np.asarray(series)
+    t0 = time.perf_counter()
+    points: list[Optional[DesignPoint]] = [None] * len(candidates)
+    buckets_by_encoder: dict[str, int] = {}
+    shards = 1
+    lowering = ""
+    for encoder in dict.fromkeys(c.encoder for c in candidates):
+        idxs = [i for i, c in enumerate(candidates) if c.encoder == encoder]
+        cfgs = [
+            candidate_config(candidates[i], series.shape[1]) for i in idxs
+        ]
+        results = simulator.cluster_time_series_many(
+            series, labels, cfgs, epochs=epochs, seed=seed, encoder=encoder,
+            waste_cap=waste_cap, max_bucket=max_bucket,
+        )
+        buckets_by_encoder[encoder] = results[0].buckets
+        lowering = results[0].lowering
+        for i, cfg, res in zip(idxs, cfgs, results):
+            syn = cfg.synapse_count
+            shards = max(shards, res.shards)
+            points[i] = DesignPoint(
+                index=i,
+                cfg=cfg,
+                encoder=encoder,
+                rand_index=res.rand_index,
+                synapses=syn,
+                area_um2=float(forecaster.area_um2(syn)),
+                leakage_uw=float(forecaster.leakage_uw(syn)),
+                params=res.params,
+                lowering=res.lowering,
+                buckets=res.buckets,
+                shards=res.shards,
+            )
+    seconds = time.perf_counter() - t0
+    done = [p for p in points if p is not None]
+    return DSEResult(
+        points=done,
+        pareto=pareto_front(done),
+        seconds=seconds,
+        meta={
+            "search": search,
+            "candidates": len(done),
+            "buckets": buckets_by_encoder,
+            "shards": shards,
+            "lowering": lowering,
+            "epochs": epochs,
+            "seed": seed,
+        },
+    )
+
+
+def summarize(result: DSEResult) -> str:
+    """Human-readable frontier table (the example prints this)."""
+    lines = [
+        f"{len(result.points)} designs explored in {result.seconds:.2f}s "
+        f"(buckets={result.meta['buckets']}, shards={result.meta['shards']}, "
+        f"lowering={result.meta['lowering']!r})",
+        "Pareto frontier (Rand index vs forecasted TNN area/leakage):",
+    ]
+    for p in result.pareto:
+        lines.append(
+            f"  enc={p.encoder:7s} q={p.cfg.q:3d} t_max={p.cfg.t_max:4d} "
+            f"th={p.cfg.neuron.threshold:7.1f}  RI={p.rand_index:.3f}  "
+            f"syn={p.synapses:6d}  area={p.area_um2:9.0f} um^2  "
+            f"leak={p.leakage_uw:7.2f} uW"
+        )
+    return "\n".join(lines)

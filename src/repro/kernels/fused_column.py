@@ -861,6 +861,17 @@ def fit_scan_padded(
     """
     if lowering not in LOWERINGS:
         raise ValueError(f"unknown lowering: {lowering!r}")
+    if xs.shape[0] == 0:
+        # an empty stream is a caller bug: volley_block would degenerate to
+        # a zero-length blocked scan — refuse loudly instead of compiling it
+        raise ValueError(
+            "fit_scan_padded needs at least one volley (got an empty "
+            "stream, N=0)"
+        )
+    if epochs == 0:
+        # zero training passes are well-defined: the weights are returned
+        # unchanged (trivially, without building the blocked scan)
+        return w
     if v_blk is None:
         from repro.core import backend  # late: backend imports this module
 
@@ -1049,6 +1060,13 @@ def assign_padded(
     """
     if lowering not in LOWERINGS:
         raise ValueError(f"unknown lowering: {lowering!r}")
+    if xs.shape[0] == 0:
+        # same up-front guard as fit_scan_padded: an empty stream has no
+        # volleys to assign, and the kernel grid would degenerate
+        raise ValueError(
+            "assign_padded needs at least one volley (got an empty "
+            "stream, N=0)"
+        )
     if v_blk is None:
         from repro.core import backend  # late: backend imports this module
 
