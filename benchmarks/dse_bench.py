@@ -1,0 +1,112 @@
+"""Fault-tolerant DSE overhead benchmark — the ISSUE 6 robustness tax.
+
+The fault-isolation machinery (guarded bucket evaluation, degradation
+ladder, post-fit degeneracy guards) and the journal must be near-free on
+the happy path: a clean sweep under ``on_error='isolate'`` should cost
+what the same sweep costs under ``'raise'``, and journaling should add
+only the per-bucket atomic publish.  This benchmark times:
+
+  sweep-raise / sweep-isolate  — the same warm design sweep with the
+        guards off vs on (derived column: isolate/raise overhead ratio;
+        anything well above 1.0x means the guard layer leaked onto the
+        hot path)
+  explore-plain / explore-journal — one full explore run without vs
+        with a journal (derived: journal overhead ratio)
+  explore-resume — re-running the journaled explore with resume=True
+        (derived: speedup vs explore-plain; resume evaluates nothing,
+        so this is the journal's read-and-restore floor)
+
+Emits ``name,us_per_call,derived`` CSV rows (harness contract).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, time_pair
+from repro import dse
+from repro.core import simulator
+from repro.core.types import ColumnConfig
+
+N, LEN, CLASSES = 24, 8, 3
+EPOCHS = 2
+
+
+def _stream():
+    rng = np.random.default_rng(0)
+    return rng.normal(size=(N, LEN)), rng.integers(0, CLASSES, N)
+
+
+def _cfgs():
+    out = []
+    for q in (2, 3):
+        for scale in (0.9, 1.0, 1.1):
+            c = ColumnConfig(p=LEN, q=q, t_max=16)
+            out.append(
+                c.with_threshold(scale * simulator.suggest_threshold(c))
+            )
+    return out
+
+
+def run() -> list:
+    rows = []
+    x, y = _stream()
+    cfgs = _cfgs()
+
+    def sweep(on_error):
+        simulator.cluster_time_series_many(
+            x, y, cfgs, epochs=EPOCHS, seed=0, on_error=on_error
+        )
+
+    t_raise, t_isolate = time_pair(
+        lambda: sweep("raise"), lambda: sweep("isolate"), repeats=5
+    )
+    rows.append(("sweep-raise", t_raise, ""))
+    rows.append(
+        ("sweep-isolate", t_isolate, f"{t_isolate / t_raise:.2f}x vs raise")
+    )
+
+    space = dse.DesignSpace(q=(2, 3), t_max=(16,), threshold_scale=(0.9, 1.1))
+
+    def explore_plain():
+        dse.explore(x, y, space, epochs=EPOCHS, seed=0)
+
+    tmp = tempfile.mkdtemp(prefix="dse_bench_")
+
+    def explore_journal():
+        path = os.path.join(tmp, f"j{time.monotonic_ns()}.jsonl")
+        dse.explore(x, y, space, epochs=EPOCHS, seed=0, journal=path)
+        return path
+
+    t_plain, t_journal = time_pair(explore_plain, explore_journal, repeats=5)
+    rows.append(("explore-plain", t_plain, ""))
+    rows.append(
+        ("explore-journal", t_journal, f"{t_journal / t_plain:.2f}x vs plain")
+    )
+
+    path = explore_journal()
+    t0 = time.perf_counter()
+    dse.explore(x, y, space, epochs=EPOCHS, seed=0, journal=path, resume=True)
+    t_resume = (time.perf_counter() - t0) * 1e6
+    rows.append(
+        ("explore-resume", t_resume, f"{t_plain / t_resume:.1f}x speedup")
+    )
+    return rows
+
+
+def main(argv=None) -> int:
+    rows = run()
+    for name, us, derived in rows:
+        emit(name, us, derived)
+    print()
+    print("fault-tolerant DSE overhead (warm, CPU reference lowering)")
+    for name, us, derived in rows:
+        print(f"  {name:<16} {us / 1e3:9.1f} ms  {derived}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main([]))

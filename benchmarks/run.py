@@ -12,6 +12,7 @@ Emits ``name,us_per_call,derived`` CSV rows (plus human tables) for:
   kernels  — Pallas kernel sweeps (beyond paper)
   train    — fused online-STDP training (columns + multi-layer network)
              vs legacy loops (BENCH_train.json)
+  dse      — fault-isolation + journal overhead of the design sweep
   roofline — §Roofline report from dry-run artifacts (if present)
 
 ``--check`` imports every registered benchmark and exits nonzero if any
@@ -34,6 +35,7 @@ MODULES = {
     "table5": "benchmarks.table5_forecast",
     "kernels": "benchmarks.kernels_bench",
     "train": "benchmarks.train_bench",
+    "dse": "benchmarks.dse_bench",
     "roofline": "benchmarks.roofline",
 }
 

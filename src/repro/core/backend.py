@@ -136,6 +136,79 @@ def assign_lowering(response: str, w) -> str:
     return low if on_grid else "reference"
 
 
+# ------------------------------------------------- lowering degradation
+# Fused-scan lowerings ordered top (fastest, most machinery) to bottom
+# (plainest): a failing rung re-resolves one level down.  'cycle' sits
+# below them all but is a *solver*, not a lowering of the fused step —
+# it only joins a ladder when it is provably bit-identical for the
+# design at hand (``cycle_exact``), because a fallback may change how a
+# result is computed, never what it is.
+LOWERING_LADDER = ("mosaic", "interpret", "reference")
+
+# Bound on degradation attempts per evaluation: at most every rung of the
+# ladder below the starting lowering, plus the optional 'cycle' solver
+# rung.  There is no "try the same rung twice" retry — the scans are
+# deterministic, so an identical retry reproduces the identical failure.
+MAX_EVAL_RETRIES = len(LOWERING_LADDER)
+
+
+def lowering_ladder(start: str, cycle_exact: bool = False) -> tuple[str, ...]:
+    """Degradation ladder for a fused evaluation starting at ``start``.
+
+    The central retry policy for fault-tolerant sweeps
+    (``simulator.cluster_time_series_many(on_error='isolate')`` and
+    ``dse.explore``): when a rung fails — a Mosaic lowering error, an OOM,
+    a kernel miscompile guard — the evaluation re-resolves one rung down
+    and retries, bounded by the ladder length (``MAX_EVAL_RETRIES``).
+    Every fused rung computes the same algebra (bit-identical on any
+    host, see ``docs/backends.md``), so degradation changes *how* a
+    result is produced, never the result.
+
+    ``cycle_exact=True`` appends the 'cycle' solver as a last rung; pass
+    it only when ``cycle_exact(cfg, w0)`` holds — i.e. the solver is
+    bit-identical to the fused path for this design — otherwise the
+    ladder ends at 'reference' and an evaluation failing every rung is
+    quarantined rather than silently re-scored under different fire
+    semantics.
+    """
+    if start == "cycle":
+        return ("cycle",)
+    if start in LOWERING_LADDER:
+        rungs = LOWERING_LADDER[LOWERING_LADDER.index(start):]
+        # the interpreter is validation-only: never auto-degrade INTO it,
+        # only out of it when a caller started there explicitly
+        rungs = tuple(r for r in rungs if r == start or r != "interpret")
+    else:
+        raise ValueError(
+            f"unknown lowering: {start!r} (have {LOWERING_LADDER + ('cycle',)})"
+        )
+    return rungs + (("cycle",) if cycle_exact else ())
+
+
+def cycle_exact(cfg: ColumnConfig, w0) -> bool:
+    """True iff the 'cycle' solver is bit-identical to the fused path for
+    this design, making it a legal bottom rung of the degradation ladder.
+
+    The fused fire rounds weights to the integer grid {0..w_max}; the
+    solvers fire on float weights.  The two coincide exactly when
+    training keeps the weights on the grid: integer STDP steps, no
+    stabilizer, and init weights already integral (checked concretely,
+    like ``assign_lowering`` — abstract weights answer False).
+    """
+    s = cfg.stdp
+    if s.stabilizer != "none" or s.mode != "expected":
+        return False
+    if not all(
+        float(mu).is_integer()
+        for mu in (s.mu_capture, s.mu_backoff, s.mu_search)
+    ):
+        return False
+    try:
+        return bool(jnp.all(w0 == jnp.round(w0)))
+    except jax.errors.ConcretizationTypeError:
+        return False
+
+
 # ---------------------------------------------------- bucket / shard policy
 # A design joins a shared padding envelope only while padding inflates no
 # member's per-volley fire volume (p * q * t_max) beyond this factor:

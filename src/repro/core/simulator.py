@@ -36,7 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional, Sequence
+from typing import Callable, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -73,6 +73,51 @@ class ClusteringResult:
     # bucket sharded its design axis across (1 = single-device fallback).
     buckets: int = 1
     shards: int = 1
+    # Degradation count (``on_error='isolate'`` sweeps only): how many
+    # ladder rungs failed before the one recorded in ``lowering`` ran.
+    # 0 = first-choice lowering succeeded.
+    retries: int = 0
+
+
+@dataclasses.dataclass
+class EvalFailure:
+    """A quarantined design evaluation — the structured no-crash outcome.
+
+    Fault-isolated sweeps (``cluster_time_series_many(on_error='isolate')``
+    and ``dse.explore``) convert per-design failures into these records
+    instead of aborting the run: the design is quarantined, every other
+    design's result is untouched (bit-identical to a failure-free sweep —
+    bucketing and the degradation ladder never change surviving results).
+
+    Attributes:
+      index: the design's position in the sweep's input order.
+      stage: where it failed — 'fit' (every ladder rung raised), 'assign'
+        (training succeeded, assignment raised), 'weights' (non-finite
+        weights after training), or 'silent' (no output spikes on any
+        volley, so the Rand index is undefined).
+      error: the final exception repr, or a diagnostic for the
+        weights/silent guards.
+      lowerings: the ladder rungs attempted, in order.
+      retries: failed attempts before giving up (== len(lowerings) for
+        'fit' failures; the rung that *ran* for post-check failures is
+        last in ``lowerings``).
+    """
+
+    index: int
+    stage: str
+    error: str
+    lowerings: tuple = ()
+    retries: int = 0
+
+    @property
+    def rand_index(self) -> float:
+        """NaN — a quarantined design carries no quality information
+        (lets failure records ride result lists without isinstance
+        checks at every consumer)."""
+        return float("nan")
+
+
+SweepOutcome = Union[ClusteringResult, EvalFailure]
 
 
 def suggest_threshold(cfg: ColumnConfig) -> float:
@@ -255,6 +300,132 @@ def _sweep_bucket(
     return asg, w_out, shards
 
 
+def _eval_design_solver(
+    cfg: ColumnConfig, volleys: jnp.ndarray, w0: np.ndarray, epochs: int
+) -> tuple[np.ndarray, jnp.ndarray]:
+    """Bottom-rung ('cycle') evaluation of ONE design on the solver scan.
+
+    Only reached when ``backend.cycle_exact`` holds for the design, i.e.
+    the solver is bit-identical to the fused path (integer STDP steps, no
+    stabilizer, integer init weights) — the ladder never trades semantics
+    for availability.
+    """
+    params = column_lib.fit(
+        {"w": jnp.asarray(w0)}, volleys, cfg, epochs=epochs, mode="cycle"
+    )
+    asg = np.asarray(
+        column_lib.cluster_assignments(params, volleys, cfg, "cycle")
+    )
+    return asg, jnp.asarray(params["w"])
+
+
+def _design_guard(
+    cfg: ColumnConfig, asg_i: np.ndarray, w_i
+) -> Optional[tuple[str, str]]:
+    """Post-training degeneracy checks for one design (guarded sweeps).
+
+    Returns (stage, diagnostic) for a quarantinable outcome, None for a
+    healthy design: non-finite trained weights (a NaN/inf anywhere makes
+    the design's assignments meaningless), or a fully silent design (no
+    volley produced an output spike, so every assignment is the
+    'unclustered' bucket and the Rand index carries no information).
+    """
+    w_np = np.asarray(w_i)
+    if not np.all(np.isfinite(w_np)):
+        return (
+            "weights",
+            f"non-finite weights after training "
+            f"(nan={int(np.isnan(w_np).sum())}, "
+            f"inf={int(np.isinf(w_np).sum())})",
+        )
+    if np.all(np.asarray(asg_i) == cfg.q):
+        return (
+            "silent",
+            "silent design: no output spikes on any volley, "
+            "Rand index undefined",
+        )
+    return None
+
+
+def _eval_bucket_guarded(
+    cfgs: Sequence[ColumnConfig],
+    idxs: Sequence[int],
+    envelope: tuple[int, int, int],
+    enc: Sequence[jnp.ndarray],
+    w_init: Sequence[np.ndarray],
+    epochs: int,
+    lowering: str,
+) -> list:
+    """Fault-isolated evaluation of one envelope bucket.
+
+    Walks the central degradation ladder (``backend.lowering_ladder``)
+    bucket-wise first — a rung failure (Mosaic lowering error, OOM) is
+    usually envelope-wide, and one retry at the next rung fixes every
+    member with one compilation.  Only when *every* fused rung fails
+    bucket-wise does it isolate per design: each member re-runs alone
+    (its own envelope — bit-identical by the padding contract) down the
+    same ladder, then the 'cycle' solver rung where that is provably
+    exact, so one degenerate design quarantines itself and never its
+    bucket-mates.
+
+    Returns one outcome per member, aligned with ``idxs``: either a
+    tuple ``('ok', asg, w, shards, lowering_ran, retries)`` or an
+    ``EvalFailure``.
+    """
+    ladder = backend_lib.lowering_ladder(lowering)
+    attempts: list[tuple[str, str]] = []
+    for low in ladder:
+        try:
+            asg_b, w_b, shards = _sweep_bucket(
+                cfgs, idxs, envelope, enc, w_init, epochs, low
+            )
+            return [
+                ("ok", asg_b[j], w_b[j], shards, low, len(attempts))
+                for j in range(len(idxs))
+            ]
+        except Exception as e:  # noqa: BLE001 — the guard IS the feature
+            attempts.append((low, repr(e)))
+    out = []
+    for i in idxs:
+        c = cfgs[i]
+        d_attempts = list(attempts)
+        done = None
+        solo_ladder = backend_lib.lowering_ladder(
+            lowering, cycle_exact=backend_lib.cycle_exact(
+                c, jnp.asarray(w_init[i])
+            ),
+        )[: backend_lib.MAX_EVAL_RETRIES]
+        for low in solo_ladder:
+            try:
+                if low == "cycle":
+                    asg_i, w_i = _eval_design_solver(
+                        c, enc[i], w_init[i], epochs
+                    )
+                else:
+                    asg_1, w_1, _ = _sweep_bucket(
+                        cfgs, [i], (c.p, c.q, c.t_max), enc, w_init,
+                        epochs, low,
+                    )
+                    asg_i, w_i = asg_1[0], w_1[0]
+                done = ("ok", asg_i, w_i, 1, low, len(d_attempts))
+                break
+            except Exception as e:  # noqa: BLE001
+                d_attempts.append((low, repr(e)))
+        if done is None:
+            out.append(
+                EvalFailure(
+                    index=i,
+                    stage="fit",
+                    error=d_attempts[-1][1],
+                    lowerings=tuple(l for l, _ in d_attempts),
+                    retries=len(d_attempts),
+                )
+            )
+        else:
+            out.append(done)
+    return out
+
+
 def cluster_time_series_many(
     series: np.ndarray,
     labels: Optional[np.ndarray],
@@ -264,7 +435,11 @@ def cluster_time_series_many(
     encoder: str = "latency",
     waste_cap: Optional[float] = None,
     max_bucket: Optional[int] = None,
-) -> list[ClusteringResult]:
+    on_error: str = "raise",
+    w_init: Optional[Sequence[np.ndarray]] = None,
+    bucket_callback: Optional[Callable] = None,
+    monitor=None,
+) -> list[SweepOutcome]:
     """Sweep several column designs over one stream, envelope-bucketed.
 
     Designs are partitioned into **envelope buckets** by the central
@@ -312,10 +487,38 @@ def cluster_time_series_many(
     the lowering that ran, ``buckets``/``shards`` the bucket count and the
     design's bucket shard count.
 
-    Returns one ClusteringResult per config, in input order.
+    **Fault isolation** (``on_error``): the default ``'raise'`` propagates
+    any evaluation failure — one degenerate design aborts the sweep, the
+    right behavior for interactive runs and tests.  ``'isolate'`` instead
+    converts per-design failures into structured ``EvalFailure`` records
+    in the result list and keeps sweeping: a failing bucket retries down
+    the central lowering-degradation ladder
+    (``backend.lowering_ladder``; a fallback changes the lowering, never
+    the semantics), a bucket failing every rung is re-run design-by-design
+    so one bad design never quarantines its bucket-mates, and trained
+    designs with non-finite weights or no output spikes at all are
+    quarantined post-hoc (``EvalFailure.stage`` 'weights' / 'silent').
+    Surviving designs are bit-identical to a failure-free sweep.
+
+    ``w_init`` overrides the seed-derived per-design init weights (one
+    ``[p, q]`` array per config) — ``dse.explore`` uses it to key inits
+    by *candidate* rather than by position, so journal-resumed partial
+    sweeps reproduce the full run exactly.  ``bucket_callback(idxs,
+    results)`` fires after each bucket's outcomes are final (the journal
+    hook: a kill loses at most one bucket); ``monitor`` is an optional
+    ``distributed.straggler.StepMonitor`` whose ``start``/``stop``
+    bracket every bucket, flagging wall-time outliers.
+
+    Returns one outcome per config, in input order: ``ClusteringResult``
+    everywhere under ``'raise'``, ``ClusteringResult | EvalFailure``
+    under ``'isolate'``.
     """
     from repro.clustering.metrics import rand_index as rand_index_fn
 
+    if on_error not in ("raise", "isolate"):
+        raise ValueError(
+            f"unknown on_error: {on_error!r} ('raise' | 'isolate')"
+        )
     if not cfgs:
         return []
     c0 = cfgs[0]
@@ -346,45 +549,90 @@ def cluster_time_series_many(
     # assignment (and with it every result) is a function of the input
     # order alone, never of how designs were bucketed.
     enc = [_encode(x, c, encoder) for c in cfgs]  # D x [N, p]
-    rng = jax.random.key(seed)
-    rng, init_key = jax.random.split(rng)
-    keys = jax.random.split(init_key, d)
-    w_init = [
-        np.asarray(column_lib.init_params(k, c)["w"])
-        for k, c in zip(keys, cfgs)
-    ]
+    if w_init is None:
+        rng = jax.random.key(seed)
+        rng, init_key = jax.random.split(rng)
+        keys = jax.random.split(init_key, d)
+        w_init = [
+            np.asarray(column_lib.init_params(k, c)["w"])
+            for k, c in zip(keys, cfgs)
+        ]
+    else:
+        if len(w_init) != d:
+            raise ValueError(
+                f"w_init must provide one array per config "
+                f"({len(w_init)} != {d})"
+            )
+        w_init = [np.asarray(w, np.float32) for w in w_init]
+        for w, c in zip(w_init, cfgs):
+            if w.shape != (c.p, c.q):
+                raise ValueError(
+                    f"w_init shape {w.shape} != design shape {(c.p, c.q)}"
+                )
 
     buckets = backend_lib.envelope_buckets(
         [(c.p, c.q, c.t_max) for c in cfgs],
         waste_cap=waste_cap, max_bucket=max_bucket,
     )
 
-    asg = [None] * d
-    w_out = [None] * d
-    shard_of = [1] * d
+    out: list[Optional[SweepOutcome]] = [None] * d
+    n_buckets = len(buckets)
     t0 = time.perf_counter()
     for envelope, idxs in buckets:
-        asg_b, w_b, shards = _sweep_bucket(
-            cfgs, idxs, envelope, enc, w_init, epochs, lowering
-        )
-        for j, i in enumerate(idxs):
-            asg[i] = asg_b[j]
-            w_out[i] = w_b[j]
-            shard_of[i] = shards
-    train_seconds = time.perf_counter() - t0
-
-    results = []
-    for i, c in enumerate(cfgs):
-        ri = float("nan")
-        if labels is not None:
-            ri = float(rand_index_fn(np.asarray(labels), asg[i]))
-        results.append(
-            ClusteringResult(
-                asg[i], ri, {"w": w_out[i]}, train_seconds, "pallas",
-                lowering, buckets=len(buckets), shards=shard_of[i],
+        if monitor is not None:
+            monitor.start()
+        if on_error == "isolate":
+            evals = _eval_bucket_guarded(
+                cfgs, idxs, envelope, enc, w_init, epochs, lowering
             )
-        )
-    return results
+        else:
+            asg_b, w_b, shards = _sweep_bucket(
+                cfgs, idxs, envelope, enc, w_init, epochs, lowering
+            )
+            evals = [
+                ("ok", asg_b[j], w_b[j], shards, lowering, 0)
+                for j in range(len(idxs))
+            ]
+        bucket_out: list[SweepOutcome] = []
+        for j, i in enumerate(idxs):
+            ev = evals[j]
+            if isinstance(ev, EvalFailure):
+                out[i] = ev
+                bucket_out.append(ev)
+                continue
+            _, asg_i, w_i, shards_i, low_i, retries_i = ev
+            if on_error == "isolate":
+                bad = _design_guard(cfgs[i], asg_i, w_i)
+                if bad is not None:
+                    out[i] = EvalFailure(
+                        index=i, stage=bad[0], error=bad[1],
+                        lowerings=(low_i,), retries=retries_i,
+                    )
+                    bucket_out.append(out[i])
+                    continue
+            ri = float("nan")
+            if labels is not None:
+                ri = float(
+                    rand_index_fn(np.asarray(labels), np.asarray(asg_i))
+                )
+            res = ClusteringResult(
+                np.asarray(asg_i), ri, {"w": w_i}, 0.0, "pallas", low_i,
+                buckets=n_buckets, shards=shards_i, retries=retries_i,
+            )
+            out[i] = res
+            bucket_out.append(res)
+        if monitor is not None:
+            monitor.stop()
+        if bucket_callback is not None:
+            bucket_callback(list(idxs), bucket_out)
+    train_seconds = time.perf_counter() - t0
+    # every result reports the whole sweep's wall time (documented
+    # contract) — patched after the loop so bucket callbacks always see
+    # otherwise-final records
+    for r in out:
+        if isinstance(r, ClusteringResult):
+            r.train_seconds = train_seconds
+    return out
 
 
 # --------------------------------------------------- multi-layer networks

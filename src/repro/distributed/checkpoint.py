@@ -15,6 +15,10 @@ Layout (one directory per step):
 * In a multi-process deployment each process writes its addressable shards
   (the manifest records the layout); this single-process environment writes
   full arrays — the interface and atomicity protocol are identical.
+
+The write-then-rename atomic-publish protocol here is also the durability
+story of the DSE journal (``repro.dse.journal``), which applies it per
+appended record batch instead of per checkpoint step.
 """
 from __future__ import annotations
 

@@ -6,6 +6,10 @@ of the step-time distribution and flags outliers; the mitigation policy is
 pluggable — the trainer consumes ``should_rebalance`` to shrink the slow
 host's microbatch share (the data pipeline's ``shard_at`` is elastic in the
 shard->slice mapping, so re-balancing is a pure metadata change).
+
+``StepMonitor`` is consumer-agnostic: the design sweep wraps each bucket
+evaluation in ``start()``/``stop()`` the same way (``dse.explore`` surfaces
+the flagged stalls on ``DSEResult.meta['stalls']``).
 """
 from __future__ import annotations
 

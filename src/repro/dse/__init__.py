@@ -5,10 +5,18 @@ silicon: ``explore`` sweeps a ``DesignSpace`` over a labeled stream via
 the envelope-bucketed, device-sharded design sweep
 (``simulator.cluster_time_series_many``), pairs every design's Rand
 index with forecasted area/leakage (``repro.hwgen.forecast``), and
-returns the Pareto frontier of quality vs silicon cost.  See
+returns the Pareto frontier of quality vs silicon cost.
+
+Long runs are fault-tolerant by default: failing candidates are
+quarantined as ``EvalFailure`` records instead of aborting the sweep
+(kernel-path failures degrade down the central lowering ladder first),
+and ``explore(journal=..., resume=True)`` makes completed evaluations
+durable across kills via an atomically-published ``Journal``.  See
 ``docs/dse.md``.
 """
+from repro.core.simulator import EvalFailure
 from repro.dse.explore import DSEResult, explore, summarize
+from repro.dse.journal import Journal, candidate_fingerprint
 from repro.dse.pareto import DesignPoint, dominates, pareto_front
 from repro.dse.space import (
     Candidate,
@@ -21,7 +29,10 @@ __all__ = [
     "DSEResult",
     "DesignPoint",
     "DesignSpace",
+    "EvalFailure",
+    "Journal",
     "candidate_config",
+    "candidate_fingerprint",
     "dominates",
     "explore",
     "pareto_front",

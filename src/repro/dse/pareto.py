@@ -36,6 +36,12 @@ class DesignPoint:
     lowering: str = ""
     buckets: int = 1
     shards: int = 1
+    # Fault-tolerance provenance: the journal fingerprint of the
+    # evaluation ('' outside journaled explore runs) and how many
+    # degradation-ladder rungs failed before ``lowering`` ran (0 = the
+    # first-choice lowering succeeded).
+    fingerprint: str = ""
+    retries: int = 0
 
 
 def dominates(a: DesignPoint, b: DesignPoint) -> bool:
@@ -61,7 +67,10 @@ def pareto_front(points: Sequence[DesignPoint]) -> list[DesignPoint]:
 
     Points with a NaN rand index (unlabeled streams) are excluded — they
     cannot be ranked on quality, so a frontier over them would be
-    meaningless.
+    meaningless.  An empty input (e.g. every candidate of a
+    fault-isolated run quarantined) returns an empty frontier, never
+    raises; ``DSEResult.best`` is the entry point that turns an empty
+    frontier into a diagnostic error.
     """
     ranked = [p for p in points if not math.isnan(p.rand_index)]
     front = [
