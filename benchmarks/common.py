@@ -5,6 +5,7 @@ contract) plus a human-readable table reproducing its paper table.
 """
 from __future__ import annotations
 
+import os
 import time
 
 
@@ -46,6 +47,39 @@ def time_pair(
         fn_b()
         tb.append(time.perf_counter() - t0)
     return min(ta) * 1e6, min(tb) * 1e6
+
+
+def time_cold(fn) -> float:
+    """Wall time of ONE first call in microseconds — the compile-inclusive
+    cold cost.
+
+    Only meaningful when two preconditions hold, and the caller owns both:
+    ``fn`` has never executed in this process (no jit/AOT cache hit), and
+    the persistent compilation cache state is known and RECORDED next to
+    the number (see ``cache_state``).  Against a populated persistent
+    cache the very same first call is a disk read, not a compile — fast,
+    real, and worth reporting, but as a warm-process cold start, never as
+    the compile cliff it silently masquerades as.
+    """
+    t0 = time.perf_counter()
+    fn()
+    return (time.perf_counter() - t0) * 1e6
+
+
+def cache_state(path) -> str:
+    """Label the persistent-compilation-cache state for a cold row:
+    ``'off'`` (no cache dir), ``'fresh'`` (enabled but empty — first calls
+    pay true compiles), ``'populated'`` (has entries — first calls may be
+    cache reads).  Call BEFORE the cold measurement: the measurement
+    itself populates the cache.
+    """
+    if not path:
+        return "off"
+    try:
+        entries = [e for e in os.listdir(path) if not e.startswith(".")]
+    except OSError:
+        return "off"
+    return "populated" if entries else "fresh"
 
 
 def emit(name: str, us: float, derived) -> None:

@@ -240,9 +240,12 @@ def _fit_layer_fused(
     """Train one layer's columns on the fused path.  [c,p,q],[N,c,p] -> [c,p,q].
 
     Pads weights and volleys into the layer group's shared envelope and
-    drives ``fused_column.fit_scan_padded`` with the layer's columns as the
-    design axis — the same machinery (and, for shape-compatible layers, the
-    same compiled step) as ``simulator.cluster_time_series_many``.  The
+    drives ``backend.fit_padded`` — the envelope-keyed AOT executable
+    cache over ``fused_column.fit_scan_padded`` — with the layer's columns
+    as the design axis: shape-compatible layers (and equal-envelope design
+    sweeps in the same process) share ONE compiled executable, and a
+    persistent cache (``backend.compile_cache``) extends that across
+    processes.  The
     lowering comes from ``backend.padded_lowering``: the Mosaic kernel on
     TPU (the layer's threshold / window / live-q / mus ride along as
     runtime operands), the jnp reference body elsewhere — and fusability is
@@ -263,7 +266,7 @@ def _fit_layer_fused(
     thresholds = jnp.full((c,), cfg.neuron.threshold, jnp.float32)
     t_maxes = jnp.full((c,), cfg.t_max, TIME_DTYPE)
     q_actives = jnp.full((c,), cfg.q, TIME_DTYPE)
-    w_new = fused_column.fit_scan_padded(
+    w_new = backend_lib.fit_padded(
         w_pad, xs, thresholds, t_maxes, q_actives,
         t_window=t_window, w_max=cfg.neuron.w_max, wta_k=cfg.wta.k,
         mu_capture=cfg.stdp.mu_capture, mu_backoff=cfg.stdp.mu_backoff,

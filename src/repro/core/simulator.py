@@ -223,9 +223,13 @@ def _sweep_bucket(
     envelope, shards the design axis across local devices when the central
     policy finds a mesh (``backend.design_mesh``; None = single-device
     fallback, arrays stay put), and drives one volley-blocked
-    ``fit_scan_padded`` plus one batched ``assign_padded``.  Buckets with
-    equal envelope shapes and member counts hit the same jit cache entry —
-    trace sharing across buckets comes for free from the padding contract.
+    ``fit_scan_padded`` plus one batched ``assign_padded``.  On a single
+    device the calls route through ``backend.fit_padded`` /
+    ``backend.assign_padded`` — the envelope-keyed AOT executable cache —
+    so buckets with equal envelope shapes and member counts share ONE
+    compiled executable across sweep calls in this process, and across
+    processes once ``backend.compile_cache`` is enabled; sharded buckets
+    keep the jit path so GSPMD sees the design partitioning.
 
     Returns (assignments [Db, N], cropped per-design weights, shard count).
     """
@@ -271,8 +275,7 @@ def _sweep_bucket(
     t_maxes = backend_lib.shard_design_axis(mesh, t_maxes)
     q_actives = backend_lib.shard_design_axis(mesh, q_actives)
 
-    w = fused_column.fit_scan_padded(
-        w0, xs, thresholds, t_maxes, q_actives,
+    fit_kw = dict(
         t_window=t_window, w_max=c0.neuron.w_max, wta_k=c0.wta.k,
         mu_capture=c0.stdp.mu_capture, mu_backoff=c0.stdp.mu_backoff,
         mu_search=c0.stdp.mu_search,
@@ -280,19 +283,42 @@ def _sweep_bucket(
         response=c0.neuron.response, epochs=epochs, lowering=lowering,
         # v_blk defaults to the central backend.volley_block policy
     )
+    if mesh is None:
+        # single-device: go through the envelope-keyed AOT executable
+        # cache, so equal-envelope buckets share ONE executable across
+        # sweep calls (and across processes under backend.compile_cache)
+        w = backend_lib.fit_padded(
+            w0, xs, thresholds, t_maxes, q_actives, **fit_kw
+        )
+    else:
+        # sharded operands stay on the jit path: GSPMD propagates the
+        # design partitioning at trace time, which a sharding-free AOT
+        # executable would not
+        w = fused_column.fit_scan_padded(
+            w0, xs, thresholds, t_maxes, q_actives, **fit_kw
+        )
     # assignment batches volleys (kernel grid / vmapped blocks); the kernel
     # fires on the integer weight grid, so it is only auto-selected when
     # the trained weights concretely sit on that grid (pure lowering
     # choice) — float weights keep the reference fire on every host.
     asg_lowering = backend_lib.assign_lowering(c0.neuron.response, w)
-    asg = np.asarray(
-        fused_column.assign_padded(
-            w, xs, thresholds, t_maxes, q_actives,
-            t_window=t_window, wta_k=c0.wta.k,
-            response=c0.neuron.response, lowering=asg_lowering,
-            w_max=c0.neuron.w_max,
-        )
+    asg_kw = dict(
+        t_window=t_window, wta_k=c0.wta.k,
+        response=c0.neuron.response, lowering=asg_lowering,
+        w_max=c0.neuron.w_max,
     )
+    if mesh is None:
+        asg = np.asarray(
+            backend_lib.assign_padded(
+                w, xs, thresholds, t_maxes, q_actives, **asg_kw
+            )
+        )
+    else:
+        asg = np.asarray(
+            fused_column.assign_padded(
+                w, xs, thresholds, t_maxes, q_actives, **asg_kw
+            )
+        )
     w_out = [
         jnp.asarray(w[j, : cfgs[i].p, : cfgs[i].q])
         for j, i in enumerate(idxs)

@@ -22,12 +22,14 @@ uninterrupted run.  See ``docs/dse.md``.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Optional, Union
 
 import jax
 import numpy as np
 
+from repro.core import backend as backend_lib
 from repro.core import column as column_lib
 from repro.core import simulator
 from repro.distributed.straggler import StepMonitor
@@ -138,7 +140,11 @@ def explore(
       journal: path (or ``Journal``) to an append-only evaluation
         journal; every completed bucket is published atomically, so a
         killed run loses at most one bucket.  An existing journal
-        requires ``resume=True``.
+        requires ``resume=True``.  Journaled runs also enable the
+        persistent compilation cache in a ``compile_cache/`` directory
+        next to the journal (unless one is already configured — see
+        ``backend.compile_cache``), so resumed and repeated runs
+        compile zero envelope traces.
       resume: skip candidates already in the journal (scored *and*
         quarantined); the resumed run's frontier is bit-identical to an
         uninterrupted one.
@@ -190,6 +196,17 @@ def explore(
             {"seed": int(seed), "epochs": int(epochs), "search": search},
             resume=resume,
         )
+        # journaled runs are the long-lived ones: default the persistent
+        # compilation cache next to the journal, so a resumed (or merely
+        # repeated) exploration re-pays ZERO envelope compiles.  A deleted
+        # cache dir is recreated (re-enabling our own default repairs it,
+        # even mid-process); an explicit compile_cache() /
+        # REPRO_COMPILE_CACHE choice made earlier wins.
+        default_cache = os.path.join(
+            os.path.dirname(os.path.abspath(jr.path)), "compile_cache"
+        )
+        if backend_lib.compile_cache_dir() in (None, default_cache):
+            backend_lib.compile_cache(default_cache)
     mon = monitor if monitor is not None else StepMonitor(
         threshold=4.0, warmup=3
     )

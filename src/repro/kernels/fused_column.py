@@ -850,7 +850,9 @@ def fit_scan_padded(
         integer weight grids.
       t_blk: kernel time-block length (kernel lowerings only).
       v_blk: volleys advanced per scan step; None defers to the central
-        policy ``repro.core.backend.volley_block(lowering, n)``.
+        policy ``repro.core.backend.volley_block(lowering, n, d=D)`` —
+        envelope-aware, so small-D batches get a slimmer unrolled
+        reference block (cheap traces) than large-D ones.
 
     This entry point is deterministic — expected-mode STDP and index
     tie-break WTA need no PRNG key (that is part of the fused contract;
@@ -875,7 +877,7 @@ def fit_scan_padded(
     if v_blk is None:
         from repro.core import backend  # late: backend imports this module
 
-        v_blk = backend.volley_block(lowering, xs.shape[0])
+        v_blk = backend.volley_block(lowering, xs.shape[0], d=w.shape[0])
     if lowering != "reference":
         if response not in fire_responses(lowering):
             raise ValueError(
@@ -1144,6 +1146,104 @@ def assign_padded(
     return _ids_from_times(
         jnp.moveaxis(t_all, 0, 1), t_maxes, q_actives
     )
+
+
+# -------------------------------------------------- AOT precompilation
+# ``jit(...).lower().compile()`` entry points for the padded scans: an
+# envelope is fully described by shapes + statics, so its executable can
+# be built ahead of the first real operands — a service can pre-compile
+# its envelope set at startup, and ``backend.fit_padded`` /
+# ``backend.assign_padded`` cache these per envelope so equal-envelope
+# buckets share ONE executable across sweep calls and (with
+# ``backend.compile_cache``) across processes.  The executables are the
+# very programs the jit path would build: bit-identical results, same
+# donation (``tests/test_aot_cache.py``).
+
+def _fit_scan_padded_specs(d: int, p_pad: int, q_pad: int, n_volleys: int):
+    """(args, mu kwargs) abstract specs mirroring one fit call exactly."""
+    f32 = jnp.float32
+    args = (
+        jax.ShapeDtypeStruct((d, p_pad, q_pad), f32),          # w
+        jax.ShapeDtypeStruct((n_volleys, d, p_pad), TIME_DTYPE),  # xs
+        jax.ShapeDtypeStruct((d,), f32),                       # thresholds
+        jax.ShapeDtypeStruct((d,), TIME_DTYPE),                # t_maxes
+        jax.ShapeDtypeStruct((d,), TIME_DTYPE),                # q_actives
+    )
+    mus = {
+        name: jax.ShapeDtypeStruct((), f32)
+        for name in ("mu_capture", "mu_backoff", "mu_search")
+    }
+    return args, mus
+
+
+def precompile_fit_scan_padded(
+    d: int,
+    p_pad: int,
+    q_pad: int,
+    n_volleys: int,
+    *,
+    t_window: int,
+    w_max: int,
+    wta_k: int,
+    stabilize: bool,
+    response: str,
+    epochs: int,
+    lowering: str = "reference",
+    t_blk: int = 128,
+    v_blk: int | None = None,
+):
+    """AOT-compile ``fit_scan_padded`` for one envelope; no operands needed.
+
+    Returns a ``jax.stages.Compiled`` executable.  Call it exactly like
+    the dynamic half of the jitted entry point — five positional arrays
+    ``(w, xs, thresholds, t_maxes, q_actives)`` matching the spec shapes
+    plus the three STDP mus by keyword as f32 scalars (the call's
+    args/kwargs pytree must mirror the lowering's) — and it behaves
+    bit-for-bit like the jit path, including donating ``w``.
+    """
+    if v_blk is None:
+        from repro.core import backend  # late: backend imports this module
+
+        v_blk = backend.volley_block(lowering, n_volleys, d=d)
+    args, mus = _fit_scan_padded_specs(d, p_pad, q_pad, n_volleys)
+    return fit_scan_padded.lower(
+        *args,
+        t_window=t_window, w_max=w_max, wta_k=wta_k, **mus,
+        stabilize=stabilize, response=response, epochs=epochs,
+        lowering=lowering, t_blk=t_blk, v_blk=v_blk,
+    ).compile()
+
+
+def precompile_assign_padded(
+    d: int,
+    p_pad: int,
+    q_pad: int,
+    n_volleys: int,
+    *,
+    t_window: int,
+    wta_k: int,
+    response: str,
+    lowering: str = "reference",
+    t_blk: int = 128,
+    v_blk: int | None = None,
+    w_max: int | None = None,
+):
+    """AOT-compile ``assign_padded`` for one envelope.
+
+    Same contract as ``precompile_fit_scan_padded``: the returned
+    ``Compiled`` takes the five positional arrays and is bit-identical to
+    the jitted assignment (nothing donated).
+    """
+    if v_blk is None:
+        from repro.core import backend  # late: backend imports this module
+
+        v_blk = backend.volley_block(lowering, n_volleys)
+    args, _ = _fit_scan_padded_specs(d, p_pad, q_pad, n_volleys)
+    return assign_padded.lower(
+        *args,
+        t_window=t_window, wta_k=wta_k, response=response,
+        lowering=lowering, t_blk=t_blk, v_blk=v_blk, w_max=w_max,
+    ).compile()
 
 
 def fit_fused(

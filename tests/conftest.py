@@ -1,4 +1,5 @@
-"""Test-suite bootstrap: a tiny vendored ``hypothesis`` shim.
+"""Test-suite bootstrap: the ``compile_counter`` fixture and a tiny
+vendored ``hypothesis`` shim.
 
 Several test modules hard-import ``hypothesis``; the container does not ship
 it and nothing may be pip-installed.  Instead of skipping those modules (and
@@ -18,11 +19,90 @@ is installed it is used untouched.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import random
 import sys
 import types
 import zlib
+
+import pytest
+
+
+class CompileCounter:
+    """Counts real XLA compilations and jit trace-cache growth.
+
+    ``compiles`` / ``names`` record every module that went through
+    ``jax._src.compiler.backend_compile`` — the one funnel below
+    ``jit``/``lower().compile()`` that persistent-cache HITS skip, so it
+    counts true compilation work, not tracing.  ``named(substr)`` filters
+    by HLO module name (e.g. ``'fit_scan_padded'``), which keeps
+    assertions robust against incidental helper modules (conversions,
+    broadcasts) the runtime compiles on the side.  ``expect_traces``
+    pins the *tracing* side via a jitted callable's ``_cache_size()``.
+    """
+
+    def __init__(self):
+        self.compiles = 0
+        self.names: list[str] = []
+
+    def named(self, substr: str) -> int:
+        return sum(1 for n in self.names if substr in n)
+
+    @staticmethod
+    def traces(fn) -> int:
+        return fn._cache_size()
+
+    @contextlib.contextmanager
+    def expect_traces(self, fn, n: int):
+        before = fn._cache_size()
+        yield
+        got = fn._cache_size() - before
+        assert got == n, (
+            f"expected exactly {n} new trace(s) of "
+            f"{getattr(fn, '__name__', fn)}, got {got}"
+        )
+
+
+@pytest.fixture
+def compile_counter(monkeypatch, tmp_path):
+    """Intercept compilation at the jax.jit / AOT lower seam.
+
+    Every trace-count / compile-count assertion in the suite goes through
+    this fixture — one seam, one contract.  Both persistence layers — the
+    JAX compilation cache AND the serialized-AOT-executable store keyed
+    off ``backend.compile_cache_dir()`` — are pointed at a throwaway
+    per-test directory for the fixture's lifetime, so counts are
+    deterministic regardless of whether the environment (e.g. CI) runs
+    the suite with a warm ``REPRO_COMPILE_CACHE``.
+    """
+    import jax
+    from jax._src import compiler as _compiler
+    from repro.core import backend as _backend
+
+    counter = CompileCounter()
+    orig = _compiler.backend_compile
+
+    def spy(backend, module, *args, **kwargs):
+        try:
+            name = str(module.operation.attributes["sym_name"])
+        except Exception:
+            name = str(getattr(module, "name", ""))
+        counter.compiles += 1
+        counter.names.append(name)
+        return orig(backend, module, *args, **kwargs)
+
+    monkeypatch.setattr(_compiler, "backend_compile", spy)
+    monkeypatch.setattr(
+        _backend, "_compile_cache_path", str(tmp_path / "jaxcache")
+    )
+    prev = jax.config.jax_compilation_cache_dir
+    jax.config.update("jax_compilation_cache_dir", str(tmp_path / "jaxcache"))
+    try:
+        yield counter
+    finally:
+        jax.config.update("jax_compilation_cache_dir", prev)
+
 
 try:  # real hypothesis wins if present
     import hypothesis  # noqa: F401

@@ -404,6 +404,66 @@ def test_journal_atomic_publish_and_guards(tmp_path):
     assert set(dse.Journal(path).completed()) == {"aa", "bb"}
 
 
+def test_journal_torn_line_followed_by_valid_record(tmp_path):
+    """A torn line with a valid record AFTER it (a non-atomic filesystem
+    interleaving appends with a crash) loses only the torn record: later
+    valid lines are kept, the header still validates, and resume picks up
+    every intact evaluation."""
+    path = tmp_path / "run.jsonl"
+    meta = {
+        "kind": "meta", "version": dse.journal.JOURNAL_VERSION,
+        "seed": 0, "epochs": 1, "search": "grid",
+    }
+    good = {"kind": "point", "fp": "dd", "rand_index": 0.25}
+    with open(path, "w") as f:
+        f.write(json.dumps(meta) + "\n")
+        f.write('{"kind": "point", "fp": "cc", "rand_in\n')  # torn
+        f.write(json.dumps(good) + "\n")
+    jr = dse.Journal(path)
+    assert jr.load() == [meta, good]
+    assert jr.completed() == {"dd": good}
+    restored = jr.begin(
+        {"seed": 0, "epochs": 1, "search": "grid"}, resume=True
+    )
+    assert set(restored) == {"dd"}
+    # appending re-publishes atomically: the torn line is gone for good
+    jr.append([{"kind": "point", "fp": "ee", "rand_index": 0.75}])
+    assert set(dse.Journal(path).completed()) == {"dd", "ee"}
+    raw = open(path).read()
+    assert '"cc"' not in raw
+
+
+def test_explore_resume_with_deleted_compile_cache_dir(tmp_path):
+    """Journaled explorations default the persistent compilation cache to
+    ``compile_cache/`` next to the journal.  Resuming with a matching
+    meta-header after that directory vanished (cleaned scratch space)
+    must repair the directory and reproduce the run, never fail."""
+    import shutil
+
+    x, y = _stream(n=10, seed=13)
+    space = dse.DesignSpace(q=(2, 3), t_max=(16,))
+    path = tmp_path / "dse.jsonl"
+    cache_dir = tmp_path / "compile_cache"
+    prev_dir = jax.config.jax_compilation_cache_dir
+    prev_path = backend._compile_cache_path
+    backend._compile_cache_path = None  # a fresh process picks the default
+    try:
+        full = dse.explore(x, y, space, epochs=1, seed=7, journal=str(path))
+        assert backend.compile_cache_dir() == str(cache_dir)
+        assert cache_dir.is_dir()
+        shutil.rmtree(cache_dir)
+        again = dse.explore(
+            x, y, space, epochs=1, seed=7, journal=str(path), resume=True
+        )
+        assert cache_dir.is_dir(), "resume must repair the cache dir"
+        assert again.meta["resumed"] == space.size()
+        for a, b in zip(full.points, again.points):
+            assert a.rand_index == b.rand_index
+    finally:
+        jax.config.update("jax_compilation_cache_dir", prev_dir)
+        backend._compile_cache_path = prev_path
+
+
 def test_explore_resume_skips_completed_and_is_bit_identical(tmp_path):
     x, y = _stream(n=12, seed=11)
     space = dse.DesignSpace(q=(2, 3), t_max=(16, 24))

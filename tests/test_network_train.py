@@ -83,12 +83,17 @@ def test_network_backends_bit_identical_on_integer_weights():
             )
 
 
-def test_network_fit_compiles_once_per_layer_shape():
+def test_network_fit_compiles_once_per_layer_shape(compile_counter):
     """Layers padded to the same envelope shape share ONE compiled scan;
-    refitting the same network recompiles nothing."""
-    # unique geometry (t_max=18) so this test owns its jit cache keys:
+    refitting the same network recompiles nothing.
+
+    Counted at the ``backend_compile`` seam (``compile_counter``), not via
+    ``_cache_size()``: the network routes through ``backend.fit_padded``'s
+    AOT executable cache, which never touches the jit trace cache.
+    """
+    # unique geometry (t_max=18) so this test owns its envelope keys:
     # layers 0 and 1 both vmap 2 columns in the (p=10, q=3, 18) envelope
-    # -> one shared trace; layer 2 (1 column) -> a second trace.
+    # -> one shared executable; layer 2 (1 column) -> a second one.
     net = NetworkConfig(layers=(
         LayerConfig(columns=2, column=int_col(10, 3, 18, 5.0)),
         LayerConfig(columns=2, column=int_col(6, 3, 18, 4.0)),
@@ -97,15 +102,16 @@ def test_network_fit_compiles_once_per_layer_shape():
     params, x = int_net_data(net, in_width=10, n=9, seed=1)
     for layer in net.layers:
         assert backend.resolve("auto", layer.column, training=True) == "pallas"
-    fn = fused_column.fit_scan_padded
-    before = fn._cache_size()
+    backend.aot_cache_clear()
     trained = network.fit_greedy(params, x, net, epochs=4, mode="auto")
-    after_first = fn._cache_size()
-    assert after_first == before + 2, (
+    after_first = compile_counter.named("fit_scan_padded")
+    assert after_first == 2, (
         "3 layers / 2 distinct padded shapes must compile exactly 2 scans"
     )
     network.fit_greedy(params, x, net, epochs=4, mode="auto")
-    assert fn._cache_size() == after_first, "refit must not recompile"
+    assert compile_counter.named("fit_scan_padded") == after_first, (
+        "refit must not recompile"
+    )
     assert trained[0]["w"].shape == (2, 10, 3)
     assert trained[2]["w"].shape == (1, 6, 2)
 

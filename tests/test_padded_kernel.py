@@ -68,7 +68,9 @@ def test_padded_kernel_wta_k_and_stabilizer_paths_match():
     )
 
 
-def test_padded_scan_compiles_once_per_envelope_across_designs():
+def test_padded_scan_compiles_once_per_envelope_across_designs(
+    compile_counter,
+):
     """Acceptance: one compilation per envelope shape.  Re-running with
     every per-design scalar changed — thresholds, windows, live-q, and the
     (now traced) STDP mus — must reuse the first trace."""
@@ -76,39 +78,36 @@ def test_padded_scan_compiles_once_per_envelope_across_designs():
     # unique envelope (p_pad=20, q_pad=5, t_window=23) so the cache keys
     # in this test are not shared with other tests
     w0, xs0, th0, _, qa0, _ = padded_batch(seed=2)
-    before = fn._cache_size()
-    fn(
-        w0, xs0, th0,
-        jnp.asarray([23, 12, 20], TIME_DTYPE), qa0,
-        t_window=23, w_max=7, wta_k=1, mu_capture=1.0, mu_backoff=1.0,
-        mu_search=1.0, stabilize=False, response="rnl", epochs=2,
-        lowering="interpret",
-    )
-    after_first = fn._cache_size()
-    assert after_first == before + 1, "first sweep must compile exactly once"
+    with compile_counter.expect_traces(fn, 1):  # first sweep: one compile
+        fn(
+            w0, xs0, th0,
+            jnp.asarray([23, 12, 20], TIME_DTYPE), qa0,
+            t_window=23, w_max=7, wta_k=1, mu_capture=1.0, mu_backoff=1.0,
+            mu_search=1.0, stabilize=False, response="rnl", epochs=2,
+            lowering="interpret",
+        )
     w, xs, *_ = padded_batch(seed=2)
-    fn(
-        w, xs,
-        jnp.asarray([3.0, 9.0, 6.0], jnp.float32),  # new thresholds
-        jnp.asarray([16, 23, 8], TIME_DTYPE),  # new windows
-        jnp.asarray([1, 4, 2], TIME_DTYPE),  # new live-q
-        t_window=23, w_max=7, wta_k=1,
-        mu_capture=2.0, mu_backoff=1.0, mu_search=3.0,  # new mus
-        stabilize=False, response="rnl", epochs=2, lowering="interpret",
-    )
-    assert fn._cache_size() == after_first, (
-        "per-design scalars are runtime operands; changing them must not "
-        "recompile"
-    )
+    # per-design scalars are runtime operands; changing them must not
+    # recompile
+    with compile_counter.expect_traces(fn, 0):
+        fn(
+            w, xs,
+            jnp.asarray([3.0, 9.0, 6.0], jnp.float32),  # new thresholds
+            jnp.asarray([16, 23, 8], TIME_DTYPE),  # new windows
+            jnp.asarray([1, 4, 2], TIME_DTYPE),  # new live-q
+            t_window=23, w_max=7, wta_k=1,
+            mu_capture=2.0, mu_backoff=1.0, mu_search=3.0,  # new mus
+            stabilize=False, response="rnl", epochs=2, lowering="interpret",
+        )
     # a different envelope shape IS a new trace
     w2, xs2, th, tm, qa, _ = padded_batch(seed=3, p_pad=24)
-    fn(
-        w2, xs2, th, tm, qa,
-        t_window=23, w_max=7, wta_k=1, mu_capture=1.0, mu_backoff=1.0,
-        mu_search=1.0, stabilize=False, response="rnl", epochs=2,
-        lowering="interpret",
-    )
-    assert fn._cache_size() == after_first + 1
+    with compile_counter.expect_traces(fn, 1):
+        fn(
+            w2, xs2, th, tm, qa,
+            t_window=23, w_max=7, wta_k=1, mu_capture=1.0, mu_backoff=1.0,
+            mu_search=1.0, stabilize=False, response="rnl", epochs=2,
+            lowering="interpret",
+        )
 
 
 def test_padded_lowering_selects_kernel_where_supported(monkeypatch):
