@@ -13,6 +13,7 @@ Emits ``name,us_per_call,derived`` CSV rows (plus human tables) for:
   train    — fused online-STDP training (columns + multi-layer network)
              vs legacy loops (BENCH_train.json)
   dse      — fault-isolation + journal overhead of the design sweep
+  serve    — streaming clustering service req/s + latency (BENCH_serve.json)
   roofline — §Roofline report from dry-run artifacts (if present)
 
 ``--check`` imports every registered benchmark and exits nonzero if any
@@ -36,6 +37,7 @@ MODULES = {
     "kernels": "benchmarks.kernels_bench",
     "train": "benchmarks.train_bench",
     "dse": "benchmarks.dse_bench",
+    "serve": "benchmarks.serve_bench",
     "roofline": "benchmarks.roofline",
 }
 

@@ -487,6 +487,127 @@ def _coerce(x, dtype):
     return jnp.asarray(x, dtype)
 
 
+def _fit_key(
+    w_shape, xs_shape, t_window, w_max, wta_k, stabilize, response,
+    epochs, lowering, t_blk, v_blk,
+) -> tuple:
+    """AOT cache key for one fit envelope: shapes + statics, never values."""
+    return (
+        "fit", tuple(w_shape), tuple(xs_shape), t_window, w_max, wta_k,
+        bool(stabilize), response, epochs, lowering, t_blk, v_blk,
+    )
+
+
+def _assign_key(
+    w_shape, xs_shape, t_window, wta_k, response, lowering, t_blk, v_blk,
+    w_max,
+) -> tuple:
+    return (
+        "assign", tuple(w_shape), tuple(xs_shape), t_window, wta_k, response,
+        lowering, t_blk, v_blk, w_max,
+    )
+
+
+def _resolve_executable(key: tuple, build):
+    """Executable lookup ladder: in-process -> serialized on disk -> compile.
+
+    The single resolution path under ``fit_padded``/``assign_padded`` and
+    the ``warm_*`` pre-compilers, so a warmed key and a traffic-time key
+    hit the SAME entry by construction."""
+    exe = _AOT_CACHE.get(key)
+    if exe is None:
+        exe = _aot_load(key)
+    if exe is None:
+        exe = build()
+        _aot_store(key, exe)
+    _AOT_CACHE[key] = exe
+    return exe
+
+
+def warm_fit_padded(
+    d: int,
+    p_pad: int,
+    q_pad: int,
+    n_volleys: int,
+    *,
+    t_window: int,
+    w_max: int,
+    wta_k: int,
+    stabilize: bool,
+    response: str,
+    epochs: int,
+    lowering: str,
+    t_blk: int = 128,
+    v_blk: Optional[int] = None,
+) -> bool:
+    """Make one envelope's fit executable resident *before* traffic.
+
+    Long-lived callers (the streaming service, a resumed DSE run) know
+    their envelopes up front; warming moves the one-time trace/compile —
+    or the millisecond disk deserialize under ``compile_cache`` — out of
+    the first request's latency.  No operands are needed and nothing is
+    donated.  Returns True when the executable was already resident
+    in-process (a later ``fit_padded`` with the same shapes+statics is
+    then dispatch-only).  When the module entry point has been replaced
+    by a plain callable (the fault-injection seam — see ``fit_padded``)
+    there is nothing to compile and this is a no-op returning False.
+    """
+    if not hasattr(fused_column.fit_scan_padded, "lower"):
+        return False
+    if v_blk is None:
+        v_blk = volley_block(lowering, n_volleys, d=d)
+    key = _fit_key(
+        (d, p_pad, q_pad), (n_volleys, d, p_pad), t_window, w_max, wta_k,
+        stabilize, response, epochs, lowering, t_blk, v_blk,
+    )
+    hot = key in _AOT_CACHE
+    _resolve_executable(
+        key,
+        lambda: fused_column.precompile_fit_scan_padded(
+            d, p_pad, q_pad, n_volleys,
+            t_window=t_window, w_max=w_max, wta_k=wta_k,
+            stabilize=bool(stabilize), response=response, epochs=epochs,
+            lowering=lowering, t_blk=t_blk, v_blk=v_blk,
+        ),
+    )
+    return hot
+
+
+def warm_assign_padded(
+    d: int,
+    p_pad: int,
+    q_pad: int,
+    n_volleys: int,
+    *,
+    t_window: int,
+    wta_k: int,
+    response: str,
+    lowering: str,
+    t_blk: int = 128,
+    v_blk: Optional[int] = None,
+    w_max: Optional[int] = None,
+) -> bool:
+    """Assignment twin of ``warm_fit_padded`` (same contract)."""
+    if not hasattr(fused_column.assign_padded, "lower"):
+        return False
+    if v_blk is None:
+        v_blk = volley_block(lowering, n_volleys)
+    key = _assign_key(
+        (d, p_pad, q_pad), (n_volleys, d, p_pad), t_window, wta_k, response,
+        lowering, t_blk, v_blk, w_max,
+    )
+    hot = key in _AOT_CACHE
+    _resolve_executable(
+        key,
+        lambda: fused_column.precompile_assign_padded(
+            d, p_pad, q_pad, n_volleys,
+            t_window=t_window, wta_k=wta_k, response=response,
+            lowering=lowering, t_blk=t_blk, v_blk=v_blk, w_max=w_max,
+        ),
+    )
+    return hot
+
+
 @functools.lru_cache(maxsize=None)
 def _f32_scalar(v: float):
     """Memoized scalar device transfer: the AOT dispatchers pass the STDP
@@ -554,22 +675,19 @@ def fit_padded(
             mu_search=mu_search, stabilize=stabilize, response=response,
             epochs=epochs, lowering=lowering, t_blk=t_blk, v_blk=v_blk,
         )
-    key = (
-        "fit", w.shape, xs.shape, t_window, w_max, wta_k, bool(stabilize),
-        response, epochs, lowering, t_blk, v_blk,
+    key = _fit_key(
+        w.shape, xs.shape, t_window, w_max, wta_k, stabilize, response,
+        epochs, lowering, t_blk, v_blk,
     )
-    exe = _AOT_CACHE.get(key)
-    if exe is None:
-        exe = _aot_load(key)
-    if exe is None:
-        exe = fused_column.precompile_fit_scan_padded(
+    exe = _resolve_executable(
+        key,
+        lambda: fused_column.precompile_fit_scan_padded(
             d, p_pad, q_pad, xs.shape[0],
             t_window=t_window, w_max=w_max, wta_k=wta_k,
             stabilize=bool(stabilize), response=response, epochs=epochs,
             lowering=lowering, t_blk=t_blk, v_blk=v_blk,
-        )
-        _aot_store(key, exe)
-    _AOT_CACHE[key] = exe
+        ),
+    )
     # the call must mirror the precompile specs exactly: five positional
     # arrays, mus by keyword, as f32 scalars
     return exe(
@@ -615,21 +733,18 @@ def assign_padded(
             t_window=t_window, wta_k=wta_k, response=response,
             lowering=lowering, t_blk=t_blk, v_blk=v_blk, w_max=w_max,
         )
-    key = (
-        "assign", w.shape, xs.shape, t_window, wta_k, response, lowering,
-        t_blk, v_blk, w_max,
+    key = _assign_key(
+        w.shape, xs.shape, t_window, wta_k, response, lowering, t_blk,
+        v_blk, w_max,
     )
-    exe = _AOT_CACHE.get(key)
-    if exe is None:
-        exe = _aot_load(key)
-    if exe is None:
-        exe = fused_column.precompile_assign_padded(
+    exe = _resolve_executable(
+        key,
+        lambda: fused_column.precompile_assign_padded(
             w.shape[0], w.shape[1], w.shape[2], xs.shape[0],
             t_window=t_window, wta_k=wta_k, response=response,
             lowering=lowering, t_blk=t_blk, v_blk=v_blk, w_max=w_max,
-        )
-        _aot_store(key, exe)
-    _AOT_CACHE[key] = exe
+        ),
+    )
     return exe(w, xs, thresholds, t_maxes, q_actives)
 
 

@@ -13,10 +13,36 @@ import jax.numpy as jnp
 from repro.core.types import TIME_DTYPE
 
 
+ENCODERS = ("latency", "onoff")
+
+
 def minmax_normalize(x: jnp.ndarray, axis: int = -1, eps: float = 1e-9) -> jnp.ndarray:
     lo = x.min(axis=axis, keepdims=True)
     hi = x.max(axis=axis, keepdims=True)
     return (x - lo) / (hi - lo + eps)
+
+
+def encoded_width(length: int, encoder: str) -> int:
+    """Synapse count a series of ``length`` samples encodes to.
+
+    The admission contract of every front-end (simulator sweeps, the
+    streaming service): a design with ``p`` synapses accepts exactly the
+    series lengths for which ``encoded_width(L, encoder) == p``.
+    """
+    if encoder == "latency":
+        return length
+    if encoder == "onoff":
+        return 2 * length
+    raise ValueError(f"unknown encoder: {encoder!r} (have {ENCODERS})")
+
+
+def encode(x: jnp.ndarray, t_max: int, encoder: str = "latency") -> jnp.ndarray:
+    """Dispatch on the encoder name: [..., L] -> [..., encoded_width(L)]."""
+    if encoder == "latency":
+        return latency_encode(x, t_max)
+    if encoder == "onoff":
+        return onoff_encode(x, t_max)
+    raise ValueError(f"unknown encoder: {encoder!r} (have {ENCODERS})")
 
 
 def latency_encode(

@@ -133,12 +133,7 @@ def suggest_threshold(cfg: ColumnConfig) -> float:
 def _encode_width(
     x: jnp.ndarray, t_max: int, width: int, encoder: str
 ) -> jnp.ndarray:
-    if encoder == "latency":
-        volleys = encoding.latency_encode(x, t_max)
-    elif encoder == "onoff":
-        volleys = encoding.onoff_encode(x, t_max)
-    else:
-        raise ValueError(f"unknown encoder: {encoder!r}")
+    volleys = encoding.encode(x, t_max, encoder)
     if volleys.shape[-1] != width:
         raise ValueError(
             f"encoded width {volleys.shape[-1]} != design input width {width}"
@@ -205,6 +200,56 @@ def cluster_time_series(
     return ClusteringResult(
         assignments, ri, params, train_seconds, mode, lowering
     )
+
+
+def assign_time_series(
+    series: np.ndarray,
+    cfg: ColumnConfig,
+    params: dict,
+    encoder: str = "latency",
+) -> np.ndarray:
+    """Assignment-only entry: cluster ids from frozen trained weights.
+
+    The inference half of ``cluster_time_series`` on its own — encode one
+    series ``[L]`` (returns a scalar id) or a micro-batch ``[N, L]``
+    (returns ``[N]`` ids) and fire it against ``params['w']`` with no
+    training pass.  Configs inside the fused fire contract route through
+    ``backend.assign_padded``, the envelope-keyed AOT executable cache, so
+    repeated calls at the same batch shape dispatch ONE cached executable
+    (the streaming service batches requests into exactly this path);
+    everything else (LIF) falls back to the solver-backed
+    ``column.cluster_assignments``.  Ids follow the assignment contract:
+    earliest-firing neuron index, ``cfg.q`` for a silent (unclustered)
+    volley.
+    """
+    x = jnp.asarray(series)
+    single = x.ndim == 1
+    if single:
+        x = x[None]
+    volleys = _encode(x, cfg, encoder)
+    try:
+        fused_column.check_fusable(cfg, "reference")
+    except ValueError:
+        ids = np.asarray(
+            column_lib.cluster_assignments(params, volleys, cfg, "auto")
+        )
+        return ids[0] if single else ids
+    w = jnp.asarray(params["w"], jnp.float32)[None]  # [1, p, q]
+    asg = np.asarray(
+        backend_lib.assign_padded(
+            w,
+            volleys[:, None, :],  # [N, 1, p]
+            jnp.asarray([cfg.neuron.threshold], jnp.float32),
+            jnp.asarray([cfg.t_max], TIME_DTYPE),
+            jnp.asarray([cfg.q], TIME_DTYPE),
+            t_window=cfg.t_max,
+            wta_k=cfg.wta.k,
+            response=cfg.neuron.response,
+            lowering=backend_lib.assign_lowering(cfg.neuron.response, w[0]),
+            w_max=cfg.neuron.w_max,
+        )[0]
+    )
+    return asg[0] if single else asg
 
 
 # --------------------------------------------------- batched design sweep

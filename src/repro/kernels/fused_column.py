@@ -57,6 +57,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -89,6 +90,31 @@ def _pad_volleys_silent(x: jnp.ndarray, p_pad: int, sentinel: float):
     """
     xs = jnp.full(x.shape[:-1] + (p_pad,), float(sentinel), jnp.float32)
     return xs.at[..., : x.shape[-1]].set(x.astype(jnp.float32))
+
+
+def pad_stream_silent(xs, n_total: int, sentinel):
+    """Ragged micro-batch seam: pad a volley stream [n, ...] to [n_total, ...]
+    with silent rows (every time set to ``sentinel``, which must be >= every
+    design's ``t_max``).
+
+    A serving front-end keeps ONE compiled executable per envelope by
+    padding partial request batches up to the compiled batch size; silent
+    rows assign to the "unclustered" id (``q_active``) and are sliced away
+    by the caller, and — for the positive thresholds real designs use — a
+    silent volley is an exact weight no-op under the fused STDP step, so
+    the same trick pads ragged re-fit windows.  Accepts numpy or jax
+    arrays and stays in that family (serving assembles batches host-side).
+    """
+    n = xs.shape[0]
+    if n > n_total:
+        raise ValueError(f"stream of {n} volleys exceeds batch of {n_total}")
+    if n == n_total:
+        return xs
+    if isinstance(xs, np.ndarray):
+        pad = np.full((n_total - n,) + xs.shape[1:], sentinel, xs.dtype)
+        return np.concatenate([xs, pad], axis=0)
+    pad = jnp.full((n_total - n,) + xs.shape[1:], sentinel, xs.dtype)
+    return jnp.concatenate([xs, pad], axis=0)
 
 
 def fire_responses(lowering: str) -> tuple[str, ...]:

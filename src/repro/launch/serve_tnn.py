@@ -1,0 +1,108 @@
+"""TNN serving launcher: a live ClusteringService under synthetic streams.
+
+    python -m repro.launch.serve_tnn --smoke
+    python -m repro.launch.serve_tnn --streams 64 --requests 8
+
+Stands up the streaming NSPU clustering service (``repro.serve``) over a
+small fleet of heterogeneous column designs, warms every envelope bucket's
+executables, then multiplexes ``--streams`` synthetic time-series streams
+round-robin through admission -> encode -> bucket-dispatch -> assign ->
+online re-fit, and prints sustained requests/sec, latency percentiles and
+the service stats.  ``--smoke`` shrinks everything for CI.  See
+``docs/serving.md``.
+"""
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny geometry + few requests (CI)")
+    ap.add_argument("--designs", type=int, default=4)
+    ap.add_argument("--streams", type=int, default=64,
+                    help="concurrent synthetic streams (round-robin)")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="requests per stream")
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--refit-every", type=int, default=64)
+    ap.add_argument("--length", type=int, default=24,
+                    help="series length (= synapses under latency coding)")
+    ap.add_argument("--t-max", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.designs = min(args.designs, 2)
+        args.streams = min(args.streams, 8)
+        args.requests = min(args.requests, 4)
+        args.batch = min(args.batch, 4)
+        args.refit_every = min(args.refit_every, 8)
+        args.length = min(args.length, 12)
+        args.t_max = min(args.t_max, 16)
+
+    import numpy as np
+
+    from repro.core import simulator
+    from repro.core.types import ColumnConfig
+    from repro.serve import ClusteringService, RequestRejected
+
+    # heterogeneous q/t_max so several designs share one stream length but
+    # (beyond the tightened waste cap below) split into more than one
+    # envelope bucket at the default geometry
+    cfgs = {}
+    for i in range(args.designs):
+        c = ColumnConfig(
+            p=args.length, q=3 + 2 * (i % 2),
+            t_max=args.t_max * (1 + (i // 2) % 2),
+        )
+        cfgs[f"nspu{i}"] = c.with_threshold(simulator.suggest_threshold(c))
+
+    service = ClusteringService(
+        cfgs, batch_size=args.batch, refit_every=args.refit_every,
+        refit_window=max(args.batch, args.refit_every), seed=args.seed,
+        waste_cap=2.0,
+    )
+    warm = service.warmup()
+    print(f"[serve_tnn] {len(cfgs)} designs in {warm['buckets']} bucket(s), "
+          f"warmup {warm['seconds']*1e3:.0f} ms")
+    for b in service.buckets():
+        print(f"[serve_tnn]   envelope {b['envelope']} <- {b['designs']}")
+
+    names = list(cfgs)
+    streams = [
+        np.random.default_rng(args.seed + s) for s in range(args.streams)
+    ]
+    handles = []
+    t0 = time.perf_counter()
+    for r in range(args.requests):
+        for s, rng in enumerate(streams):
+            design = names[s % len(names)]
+            series = rng.normal(size=args.length)
+            try:
+                handles.append(service.submit(series, design))
+            except RequestRejected as e:  # not expected on this driver
+                print(f"[serve_tnn] rejected: {e}")
+    service.flush()
+    elapsed = time.perf_counter() - t0
+
+    lat = sorted(
+        h.result().latency_s for h in handles if h.result() is not None
+    )
+    stats = service.stats()
+    n = len(lat)
+    rps = n / max(elapsed, 1e-9)
+    p50 = lat[n // 2] * 1e3 if n else float("nan")
+    p99 = lat[min(n - 1, int(n * 0.99))] * 1e3 if n else float("nan")
+    print(f"[serve_tnn] {n} requests over {args.streams} streams in "
+          f"{elapsed*1e3:.0f} ms -> {rps:.0f} req/s "
+          f"(p50 {p50:.2f} ms, p99 {p99:.2f} ms)")
+    print(f"[serve_tnn] stats: {stats}")
+    if stats.served != len(handles) or stats.failed or stats.pending:
+        print("[serve_tnn] FAILED: not every request served")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

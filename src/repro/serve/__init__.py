@@ -1,0 +1,30 @@
+"""Streaming NSPU clustering service — the request front-end of the repo.
+
+``ClusteringService`` holds a set of trained (or training) TNN column
+designs behind an admission -> encode -> bucket-dispatch -> assign ->
+re-fit pipeline: designs pack into shared padding envelopes
+(``backend.envelope_buckets``), each bucket keeps ONE compiled assignment
+executable and ONE re-fit executable resident through the AOT front doors
+(``backend.fit_padded`` / ``assign_padded``), incoming series are
+latency-encoded and micro-batched by envelope into the grid-batched
+assignment fire, and the live weights keep learning via periodic online
+STDP re-fits that resume the fused scan from the served stream (the
+donated-weight contract).  See ``docs/serving.md``.
+"""
+from repro.serve.service import (
+    ClusteringService,
+    PendingRequest,
+    RequestRejected,
+    ServeFailure,
+    ServeResult,
+    ServeStats,
+)
+
+__all__ = [
+    "ClusteringService",
+    "PendingRequest",
+    "RequestRejected",
+    "ServeFailure",
+    "ServeResult",
+    "ServeStats",
+]

@@ -1,0 +1,589 @@
+"""Long-lived streaming clustering service over envelope-bucketed NSPUs.
+
+The serving pipeline, stage by stage (each independently testable):
+
+* **admission** — ``submit`` validates a request against its design's
+  compiled envelope *before anything touches JAX*: an unknown design, a
+  series whose encoded width does not match any compiled bucket, or
+  non-finite samples raise a structured ``RequestRejected`` — never a
+  fresh trace.
+* **encode** — the series becomes a spike volley via the central encoder
+  dispatch (``encoding.encode``), using the target design's gamma window.
+* **bucket dispatch** — designs are packed into shared padding envelopes
+  at construction (``backend.envelope_buckets``); a request rides the
+  queue of its design's bucket and is batched with requests for *any*
+  design in that bucket.
+* **assign** — a full micro-batch (or a ``flush``-forced partial one,
+  silent-padded to the compiled batch size through
+  ``fused_column.pad_stream_silent``) dispatches ONE envelope-keyed AOT
+  executable (``backend.assign_padded``).  After ``warmup`` the steady
+  state performs zero XLA compiles: executables are keyed on
+  shapes + statics, and the batch geometry never changes.
+* **re-fit** — every ``refit_every`` served requests per bucket, the live
+  weights take an online-STDP pass over the most recent
+  ``refit_window`` volleys each design served
+  (``backend.fit_padded`` — the fused scan resumed from live weights via
+  its donated-weight contract).  Ragged buffers are silent-padded: for
+  the positive thresholds the service enforces, a silent volley is an
+  exact weight no-op, so the re-fit is bit-identical to an offline
+  ``fit_padded`` resume on the same volleys.
+
+Failures quarantine per request: if a batch raises, each live request
+re-runs alone against the same executable (assignment is per-volley
+independent, so batch-mates' answers are bit-identical to the batched
+run) and only the poisoned request surfaces a ``ServeFailure``.
+
+The service is synchronous and single-threaded; "concurrent streams" are
+interleaved logical streams multiplexed by the caller (see
+``benchmarks/serve_bench.py``, which sustains 64+ of them).  Stage
+timings feed a ``distributed.straggler.StepMonitor`` so stalls are
+observable through ``stats()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Mapping, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import backend as backend_lib
+from repro.core import column as column_lib
+from repro.core import encoding
+from repro.core.types import ColumnConfig, TIME_DTYPE
+from repro.distributed.straggler import StepMonitor
+from repro.kernels import fused_column
+
+
+class RequestRejected(Exception):
+    """Structured admission failure — raised by ``submit`` before any JAX
+    work happens, so a bad request can never trigger a trace storm.
+
+    ``reason`` is machine-readable: ``'unknown-design'``, ``'shape'``,
+    ``'envelope'`` (encoded width fits no compiled bucket) or
+    ``'non-finite'``.
+    """
+
+    def __init__(self, reason: str, detail: str):
+        super().__init__(f"{reason}: {detail}")
+        self.reason = reason
+        self.detail = detail
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeResult:
+    """One served assignment: ``cluster`` is the earliest-firing neuron
+    index of the target design, or its ``q`` when the volley was silent
+    (unclustered)."""
+
+    request_id: int
+    design: str
+    cluster: int
+    latency_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeFailure:
+    """A quarantined request: the batch it rode failed, and so did its
+    solo re-run.  Batch-mates are unaffected."""
+
+    request_id: int
+    design: str
+    stage: str
+    error: str
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeStats:
+    submitted: int
+    served: int
+    rejected: int
+    failed: int
+    batches: int
+    isolations: int
+    refits: int
+    stalls: int
+    pending: int
+
+
+class PendingRequest:
+    """Handle returned by ``submit``; ``result()`` forces the request's
+    bucket to flush if it is still queued."""
+
+    def __init__(self, service: "ClusteringService", rid: int, design: str):
+        self._service = service
+        self.id = rid
+        self.design = design
+        self.outcome: Optional[Union[ServeResult, ServeFailure]] = None
+
+    @property
+    def done(self) -> bool:
+        return self.outcome is not None
+
+    def result(self) -> Union[ServeResult, ServeFailure]:
+        if self.outcome is None:
+            self._service.flush(self.design)
+        assert self.outcome is not None
+        return self.outcome
+
+
+class _Request:
+    __slots__ = ("pending", "lane", "enc", "t_submit")
+
+    def __init__(self, pending, lane, enc, t_submit):
+        self.pending = pending
+        self.lane = lane
+        self.enc = enc
+        self.t_submit = t_submit
+
+
+class _Bucket:
+    """One envelope bucket: live weights + compiled-shape metadata + queue."""
+
+    def __init__(self, envelope, names, cfgs, w0):
+        self.envelope = envelope  # (p_env, q_env, t_window)
+        self.names = list(names)
+        self.cfgs = list(cfgs)
+        self.w = w0  # [Db, p_env, q_env] jnp — donated through every re-fit
+        self.thresholds = jnp.asarray(
+            [c.neuron.threshold for c in cfgs], jnp.float32
+        )
+        self.t_maxes = jnp.asarray([c.t_max for c in cfgs], TIME_DTYPE)
+        self.q_actives = jnp.asarray([c.q for c in cfgs], TIME_DTYPE)
+        c0 = cfgs[0]
+        self.fit_lowering = backend_lib.padded_lowering(c0.neuron.response)
+        self.asg_lowering = backend_lib.assign_lowering(
+            c0.neuron.response, self.w[0]
+        )
+        self.queue: list[_Request] = []
+        self.buffers: list[list[np.ndarray]] = [[] for _ in cfgs]
+        self.served_since_refit = 0
+
+
+def _design_map(
+    designs: Union[Mapping[str, ColumnConfig],
+                   Sequence[tuple[str, ColumnConfig]]],
+) -> dict[str, ColumnConfig]:
+    if isinstance(designs, Mapping):
+        return dict(designs)
+    return dict(designs)
+
+
+class ClusteringService:
+    """Streaming front-end over a fleet of NSPU column designs.
+
+    Args:
+      designs: ``{name: ColumnConfig}`` (or ``(name, cfg)`` pairs).  All
+        designs must share the fused statics (response, ``w_max``, WTA k,
+        STDP mus/mode) — the same constraint as the sweep front-end — and
+        every threshold must be positive (the silent-volley no-op that
+        partial batches and ragged re-fits rely on).
+      encoder: ``'latency'`` or ``'onoff'`` (admission uses
+        ``encoding.encoded_width`` to pin series length to design width).
+      batch_size: requests per compiled assignment micro-batch; a full
+        queue auto-executes, ``flush`` silent-pads a partial one.
+      refit_every: served requests per bucket between online re-fits
+        (0 disables re-fitting).
+      refit_window: volleys per design each re-fit trains on (the most
+        recent served; fixes the re-fit executable's shape).
+      refit_epochs: STDP epochs per re-fit.
+      weights: optional ``{name: [p, q] array}`` initial weights (e.g.
+        from an offline ``cluster_time_series`` fit); designs without an
+        entry draw ``column.init_params`` from ``fold_in(seed, index)``.
+      monitor: a ``StepMonitor`` for stage timings (one is created by
+        default; stalls surface in ``stats()``).
+    """
+
+    def __init__(
+        self,
+        designs,
+        *,
+        encoder: str = "latency",
+        batch_size: int = 16,
+        refit_every: int = 64,
+        refit_window: int = 32,
+        refit_epochs: int = 1,
+        seed: int = 0,
+        weights: Optional[Mapping[str, np.ndarray]] = None,
+        waste_cap: Optional[float] = None,
+        max_bucket: Optional[int] = None,
+        monitor: Optional[StepMonitor] = None,
+    ):
+        cfg_map = _design_map(designs)
+        if not cfg_map:
+            raise ValueError("service needs at least one design")
+        if batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
+        if refit_window < 1:
+            raise ValueError("refit_window must be >= 1")
+        # unknown encoder raises here, at construction
+        encoding.encoded_width(1, encoder)
+        self.encoder = encoder
+        self.batch_size = int(batch_size)
+        self.refit_every = int(refit_every)
+        self.refit_window = int(refit_window)
+        self.refit_epochs = int(refit_epochs)
+        self.monitor = monitor if monitor is not None else StepMonitor(
+            threshold=4.0, warmup=3
+        )
+
+        names = list(cfg_map)
+        cfgs = [cfg_map[n] for n in names]
+        c0 = cfgs[0]
+        for n, c in zip(names, cfgs):
+            fused_column.check_fusable(
+                c, backend_lib.padded_lowering(c.neuron.response)
+            )
+            if c.neuron.threshold <= 0:
+                raise ValueError(
+                    f"design {n!r}: threshold must be > 0 — the service "
+                    "pads partial batches and ragged re-fit windows with "
+                    "silent volleys, which are weight no-ops only above "
+                    "threshold 0"
+                )
+            same = (
+                c.neuron.response == c0.neuron.response
+                and c.neuron.w_max == c0.neuron.w_max
+                and c.wta == c0.wta
+                and c.stdp == c0.stdp
+            )
+            if not same:
+                raise ValueError(
+                    f"design {n!r}: all designs must share response/w_max/"
+                    "WTA/STDP statics (one compiled program per bucket)"
+                )
+        self._cfgs = cfg_map
+        self._statics = dict(
+            w_max=c0.neuron.w_max, wta_k=c0.wta.k,
+            mu_capture=c0.stdp.mu_capture, mu_backoff=c0.stdp.mu_backoff,
+            mu_search=c0.stdp.mu_search,
+            stabilize=c0.stdp.stabilizer == "half",
+            response=c0.neuron.response,
+        )
+
+        # ---- bucket construction: pack design shapes into envelopes and
+        # assemble each bucket's live weight block host-side (the sweep
+        # idiom), per-design init keys folded from the service seed
+        shapes = [(c.p, c.q, c.t_max) for c in cfgs]
+        buckets = backend_lib.envelope_buckets(shapes, waste_cap, max_bucket)
+        key = jax.random.key(seed)
+        self._buckets: list[_Bucket] = []
+        self._route: dict[str, tuple[_Bucket, int]] = {}
+        for env, members in buckets:
+            p_env, q_env, t_window = env
+            w0 = np.zeros((len(members), p_env, q_env), np.float32)
+            for lane, i in enumerate(members):
+                c = cfgs[i]
+                if weights is not None and names[i] in weights:
+                    wi = np.asarray(weights[names[i]], np.float32)
+                    if wi.shape != (c.p, c.q):
+                        raise ValueError(
+                            f"weights[{names[i]!r}]: expected shape "
+                            f"{(c.p, c.q)}, got {wi.shape}"
+                        )
+                else:
+                    wi = np.asarray(
+                        column_lib.init_params(
+                            jax.random.fold_in(key, i), c
+                        )["w"]
+                    )
+                w0[lane, : c.p, : c.q] = wi
+            bucket = _Bucket(
+                env, [names[i] for i in members],
+                [cfgs[i] for i in members], jnp.asarray(w0),
+            )
+            self._buckets.append(bucket)
+            for lane, i in enumerate(members):
+                self._route[names[i]] = (bucket, lane)
+
+        self._next_id = 0
+        self._submitted = 0
+        self._served = 0
+        self._rejected = 0
+        self._failed = 0
+        self._batches = 0
+        self._isolations = 0
+        self._refits = 0
+
+    # ------------------------------------------------------------- intro
+    def designs(self) -> tuple[str, ...]:
+        return tuple(self._cfgs)
+
+    def buckets(self) -> list[dict]:
+        """Bucket-dispatch summary: one dict per compiled envelope."""
+        return [
+            {
+                "envelope": b.envelope,
+                "designs": tuple(b.names),
+                "batch_shape": (self.batch_size, len(b.names), b.envelope[0]),
+                "refit_shape": (
+                    self.refit_window, len(b.names), b.envelope[0]
+                ),
+            }
+            for b in self._buckets
+        ]
+
+    def weights(self, design: str) -> np.ndarray:
+        """Copy of a design's live weights, cropped to its own (p, q)."""
+        bucket, lane = self._route[design]
+        c = self._cfgs[design]
+        return np.asarray(bucket.w[lane, : c.p, : c.q])
+
+    def stats(self) -> ServeStats:
+        return ServeStats(
+            submitted=self._submitted,
+            served=self._served,
+            rejected=self._rejected,
+            failed=self._failed,
+            batches=self._batches,
+            isolations=self._isolations,
+            refits=self._refits,
+            stalls=len(self.monitor.events),
+            pending=sum(len(b.queue) for b in self._buckets),
+        )
+
+    # ------------------------------------------------------------ warmup
+    def warmup(self) -> dict:
+        """Compile (or disk-load) every executable and warm every eager-op
+        shape the steady state dispatches, so traffic performs ZERO XLA
+        compiles afterwards.
+
+        Per bucket: the batch-shaped assignment executable and the
+        window-shaped re-fit executable become resident via the backend
+        ``warm_*`` pre-compilers, then one all-silent batch and one
+        all-silent re-fit run end-to-end through the real serving path —
+        silent volleys assign to "unclustered" (discarded) and are exact
+        weight no-ops, so warmup changes no answers and no weights while
+        exercising the same ops as live traffic (including the
+        per-design encode shapes).
+        """
+        t0 = time.perf_counter()
+        hot = 0
+        for name, c in self._cfgs.items():
+            length = c.p if self.encoder == "latency" else c.p // 2
+            np.asarray(encoding.encode(
+                jnp.asarray(np.zeros(length)), c.t_max, self.encoder
+            ))
+        for b in self._buckets:
+            db = len(b.names)
+            p_env, q_env, t_window = b.envelope
+            hot += backend_lib.warm_assign_padded(
+                db, p_env, q_env, self.batch_size,
+                t_window=t_window, wta_k=self._statics["wta_k"],
+                response=self._statics["response"],
+                lowering=b.asg_lowering, w_max=self._statics["w_max"],
+            )
+            self._assign(b, self._silent_batch(b))  # warm eager shapes
+            if self.refit_every > 0:
+                hot += backend_lib.warm_fit_padded(
+                    db, p_env, q_env, self.refit_window,
+                    t_window=t_window, w_max=self._statics["w_max"],
+                    wta_k=self._statics["wta_k"],
+                    stabilize=self._statics["stabilize"],
+                    response=self._statics["response"],
+                    epochs=self.refit_epochs, lowering=b.fit_lowering,
+                )
+                self._refit(b, warm=True)  # silent window: exact no-op
+        return {
+            "buckets": len(self._buckets),
+            "already_resident": hot,
+            "seconds": time.perf_counter() - t0,
+        }
+
+    # --------------------------------------------------------- admission
+    def submit(self, series, design: str) -> PendingRequest:
+        """Admit one series for ``design``; raises ``RequestRejected`` on
+        admission failure, returns a ``PendingRequest`` otherwise.  A full
+        bucket queue executes immediately (the returned handle is then
+        already ``done``)."""
+        route = self._route.get(design)
+        if route is None:
+            self._rejected += 1
+            raise RequestRejected(
+                "unknown-design",
+                f"{design!r} not served (have {sorted(self._route)})",
+            )
+        bucket, lane = route
+        cfg = self._cfgs[design]
+        x = np.asarray(series, np.float64)
+        if x.ndim != 1:
+            self._rejected += 1
+            raise RequestRejected(
+                "shape", f"expected one series [L], got shape {x.shape}"
+            )
+        width = encoding.encoded_width(x.shape[0], self.encoder)
+        if width != cfg.p:
+            self._rejected += 1
+            raise RequestRejected(
+                "envelope",
+                f"series of length {x.shape[0]} encodes to width {width}, "
+                f"which no compiled bucket accepts (design {design!r} "
+                f"envelope takes width {cfg.p})",
+            )
+        if not np.isfinite(x).all():
+            self._rejected += 1
+            raise RequestRejected(
+                "non-finite", f"series for {design!r} has non-finite samples"
+            )
+        enc = np.asarray(
+            encoding.encode(jnp.asarray(x), cfg.t_max, self.encoder)
+        )
+        pending = PendingRequest(self, self._next_id, design)
+        self._next_id += 1
+        self._submitted += 1
+        bucket.queue.append(
+            _Request(pending, lane, enc, time.perf_counter())
+        )
+        if len(bucket.queue) >= self.batch_size:
+            self._execute(bucket)
+        return pending
+
+    def flush(self, design: Optional[str] = None) -> None:
+        """Execute partial batches now (all buckets, or ``design``'s)."""
+        buckets = (
+            self._buckets if design is None else [self._route[design][0]]
+        )
+        for b in buckets:
+            while b.queue:
+                self._execute(b)
+
+    # --------------------------------------------------------- execution
+    def _silent_batch(self, bucket: _Bucket) -> np.ndarray:
+        p_env, _, t_window = bucket.envelope
+        return np.full(
+            (self.batch_size, len(bucket.names), p_env), t_window, np.int32
+        )
+
+    def _batch_xs(self, bucket: _Bucket, reqs: list[_Request]) -> np.ndarray:
+        """Assemble [B, Db, p_env] host-side: each request's volley in its
+        design's lane, every other lane silent, partial batches padded to
+        the compiled batch size through the ragged-batch seam."""
+        p_env, _, t_window = bucket.envelope
+        xs = np.full(
+            (len(reqs), len(bucket.names), p_env), t_window, np.int32
+        )
+        for n, r in enumerate(reqs):
+            xs[n, r.lane, : r.enc.shape[0]] = r.enc
+        return fused_column.pad_stream_silent(xs, self.batch_size, t_window)
+
+    def _assign(self, bucket: _Bucket, xs_np: np.ndarray) -> np.ndarray:
+        ids = backend_lib.assign_padded(
+            bucket.w, jnp.asarray(xs_np),
+            bucket.thresholds, bucket.t_maxes, bucket.q_actives,
+            t_window=bucket.envelope[2], wta_k=self._statics["wta_k"],
+            response=self._statics["response"],
+            lowering=bucket.asg_lowering, w_max=self._statics["w_max"],
+        )
+        return np.asarray(ids)  # [Db, B]
+
+    def _execute(self, bucket: _Bucket) -> None:
+        reqs = bucket.queue[: self.batch_size]
+        del bucket.queue[: self.batch_size]
+        if not reqs:
+            return
+        self.monitor.start()
+        try:
+            ids = self._assign(bucket, self._batch_xs(bucket, reqs))
+        except Exception:
+            self.monitor.stop()
+            self._isolate(bucket, reqs)
+            return
+        self.monitor.stop()
+        done = time.perf_counter()
+        self._batches += 1
+        for n, r in enumerate(reqs):
+            self._complete(
+                bucket, r,
+                ServeResult(
+                    r.pending.id, r.pending.design,
+                    int(ids[r.lane, n]), done - r.t_submit,
+                ),
+            )
+        self._maybe_refit(bucket)
+
+    def _isolate(self, bucket: _Bucket, reqs: list[_Request]) -> None:
+        """Quarantine: re-run each request of a failed batch alone against
+        the SAME executable (one live row, rest silent) — assignment is
+        per-volley independent, so survivors' answers are bit-identical
+        to the batched run; only the poisoned request fails."""
+        self._isolations += 1
+        for r in reqs:
+            self.monitor.start()
+            try:
+                ids = self._assign(bucket, self._batch_xs(bucket, [r]))
+            except Exception as e:
+                self.monitor.stop()
+                self._failed += 1
+                r.pending.outcome = ServeFailure(
+                    r.pending.id, r.pending.design, "assign", repr(e)
+                )
+                continue
+            self.monitor.stop()
+            self._batches += 1
+            self._complete(
+                bucket, r,
+                ServeResult(
+                    r.pending.id, r.pending.design,
+                    int(ids[r.lane, 0]), time.perf_counter() - r.t_submit,
+                ),
+            )
+        self._maybe_refit(bucket)
+
+    def _complete(
+        self, bucket: _Bucket, r: _Request, result: ServeResult
+    ) -> None:
+        r.pending.outcome = result
+        self._served += 1
+        bucket.served_since_refit += 1
+        if self.refit_every > 0:
+            buf = bucket.buffers[r.lane]
+            buf.append(r.enc)
+            if len(buf) > self.refit_window:
+                del buf[: len(buf) - self.refit_window]
+
+    # ------------------------------------------------------------ re-fit
+    def _refit_xs(self, bucket: _Bucket) -> np.ndarray:
+        """[R, Db, p_env] re-fit window: each design's buffered volleys in
+        arrival order, ragged tails silent (exact no-ops above threshold
+        0, so training on the padded window == training on the buffered
+        volleys alone)."""
+        p_env, _, t_window = bucket.envelope
+        xs = np.full(
+            (self.refit_window, len(bucket.names), p_env), t_window, np.int32
+        )
+        for lane, buf in enumerate(bucket.buffers):
+            for k, enc in enumerate(buf):
+                xs[k, lane, : enc.shape[0]] = enc
+        return xs
+
+    def _refit(self, bucket: _Bucket, warm: bool = False) -> None:
+        self.monitor.start()
+        bucket.w = backend_lib.fit_padded(
+            bucket.w, jnp.asarray(self._refit_xs(bucket)),
+            bucket.thresholds, bucket.t_maxes, bucket.q_actives,
+            t_window=bucket.envelope[2],
+            epochs=self.refit_epochs, lowering=bucket.fit_lowering,
+            **self._statics,
+        )
+        # off the integer grid the assignment lowering stays 'reference'
+        # on every host; re-checking after each re-fit keeps the kernel
+        # available on TPU should the weights land back on the grid
+        bucket.asg_lowering = backend_lib.assign_lowering(
+            self._statics["response"], bucket.w[0]
+        )
+        self.monitor.stop()
+        for buf in bucket.buffers:
+            buf.clear()
+        bucket.served_since_refit = 0
+        if not warm:
+            self._refits += 1
+
+    def _maybe_refit(self, bucket: _Bucket) -> None:
+        if (
+            self.refit_every > 0
+            and bucket.served_since_refit >= self.refit_every
+            and any(bucket.buffers)
+        ):
+            self._refit(bucket)

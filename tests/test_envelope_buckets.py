@@ -1,0 +1,125 @@
+"""Edge-case unit tests for ``backend.envelope_buckets`` (ISSUE 8).
+
+The sweep and the streaming service both trust this packer for the
+"one compiled executable per bucket" economy; these tests pin the
+degenerate corners the broader DSE tests (``test_dse.py``) never hit:
+waste_cap 0 and infinity, max_bucket 1, all-identical fleets, and
+wildly mismatched fleets that must NOT share an envelope.
+"""
+from __future__ import annotations
+
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import backend
+
+
+def _check_partition(shapes, buckets):
+    """Every index in exactly one bucket; every envelope is the
+    elementwise max of its members (contains each, exceeds none)."""
+    seen = sorted(i for _, members in buckets for i in members)
+    assert seen == list(range(len(shapes)))
+    for env, members in buckets:
+        for axis in range(3):
+            assert env[axis] == max(shapes[i][axis] for i in members)
+
+
+def test_waste_cap_zero_gives_all_singletons():
+    """cap 0: no envelope can satisfy vol <= 0, even for an exact-fit
+    member — every design compiles alone."""
+    shapes = [(4, 2, 8), (4, 2, 8), (8, 4, 16)]
+    buckets = backend.envelope_buckets(shapes, waste_cap=0.0)
+    _check_partition(shapes, buckets)
+    assert len(buckets) == len(shapes)
+
+
+def test_waste_cap_inf_gives_one_bucket():
+    shapes = [(1, 1, 1), (3, 9, 2), (100, 2, 64), (7, 7, 7)]
+    buckets = backend.envelope_buckets(shapes, waste_cap=math.inf)
+    _check_partition(shapes, buckets)
+    assert len(buckets) == 1
+    assert buckets[0][0] == (100, 9, 64)  # elementwise max of the fleet
+
+
+def test_max_bucket_one_gives_singletons():
+    shapes = [(4, 2, 8)] * 5
+    buckets = backend.envelope_buckets(shapes, max_bucket=1)
+    _check_partition(shapes, buckets)
+    assert len(buckets) == 5
+    assert all(env == (4, 2, 8) for env, _ in buckets)
+
+
+def test_identical_shapes_share_one_exact_envelope():
+    """All-identical fleet under the TIGHTEST useful cap (1.0): zero
+    padding waste, so one bucket holds everything."""
+    shapes = [(6, 3, 32)] * 7
+    buckets = backend.envelope_buckets(shapes, waste_cap=1.0)
+    _check_partition(shapes, buckets)
+    assert len(buckets) == 1
+    assert buckets[0][0] == (6, 3, 32)
+
+
+def test_identical_shapes_split_by_max_bucket():
+    shapes = [(6, 3, 32)] * 5
+    buckets = backend.envelope_buckets(shapes, waste_cap=1.0, max_bucket=2)
+    _check_partition(shapes, buckets)
+    assert sorted(len(m) for _, m in buckets) == [1, 2, 2]
+
+
+def test_mismatched_shapes_refuse_to_share():
+    """One-shape-per-bucket degenerate: each design's volume is > cap x
+    the next smaller one, so sharing any envelope would blow the waste
+    budget of the smaller member — the packer must keep them apart."""
+    shapes = [(2, 2, 2), (8, 8, 8), (32, 32, 32)]
+    buckets = backend.envelope_buckets(shapes, waste_cap=4.0)
+    _check_partition(shapes, buckets)
+    assert len(buckets) == 3
+    assert all(len(m) == 1 for _, m in buckets)
+
+
+def test_exact_fit_member_always_packs_under_cap_one():
+    """cap 1.0 still packs a design whose shape IS the envelope."""
+    shapes = [(8, 4, 16), (8, 4, 16)]
+    buckets = backend.envelope_buckets(shapes, waste_cap=1.0)
+    assert len(buckets) == 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 10**6),
+    n=st.integers(1, 12),
+    cap=st.sampled_from([1.0, 2.0, 4.0, 16.0]),
+    max_bucket=st.sampled_from([1, 2, 4, None]),
+)
+def test_random_fleets_respect_partition_and_caps(seed, n, cap, max_bucket):
+    """Property: any fleet partitions exactly once, every envelope is the
+    member max, per-member waste stays within cap, and bucket sizes
+    respect max_bucket."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    shapes = [
+        (int(rng.integers(1, 64)), int(rng.integers(1, 16)),
+         int(rng.integers(2, 128)))
+        for _ in range(n)
+    ]
+    buckets = backend.envelope_buckets(
+        shapes, waste_cap=cap, max_bucket=max_bucket
+    )
+    _check_partition(shapes, buckets)
+    for env, members in buckets:
+        if max_bucket is not None:
+            assert len(members) <= max_bucket
+        vol = env[0] * env[1] * env[2]
+        for i in members:
+            p, q, t = shapes[i]
+            assert vol <= cap * (p * q * t)
+
+
+def test_default_cap_is_used_when_unset():
+    # a 2x envelope (within the default cap of 4) merges; make the pair
+    # differ only on t_max so the envelope is exactly the larger shape
+    shapes = [(8, 4, 16), (8, 4, 32)]
+    buckets = backend.envelope_buckets(shapes)
+    assert len(buckets) == 1 and buckets[0][0] == (8, 4, 32)

@@ -1,0 +1,115 @@
+"""Direct unit tests for ``distributed.straggler.StepMonitor`` (ISSUE 8).
+
+The monitor guards three consumers now — the pod trainer, the design
+sweep, and the streaming service's stage timings — so its thresholding
+semantics get pinned directly with synthetic durations (no sleeping):
+stalls trigger only after warmup, recovery does not keep flagging, and
+uniformly fast steps never false-positive.
+"""
+from __future__ import annotations
+
+from repro.distributed.straggler import RebalancePolicy, StepMonitor
+
+
+def test_no_events_during_warmup_even_for_huge_stalls():
+    m = StepMonitor(window=10, threshold=2.0, warmup=5)
+    for step in range(4):
+        assert m.observe(step, 100.0 if step else 1.0) is None
+    assert m.events == []
+
+
+def test_stall_past_threshold_triggers_once_warm():
+    m = StepMonitor(window=20, threshold=2.0, warmup=5)
+    for step in range(5):
+        m.observe(step, 1.0)
+    ev = m.observe(5, 3.0)  # 3x the median of fast steps
+    assert ev is not None and m.events == [ev]
+    assert ev.step == 5 and ev.duration_s == 3.0
+    assert ev.median_s == 1.0 and ev.ratio == 3.0
+
+
+def test_no_false_positive_under_fast_uniform_steps():
+    m = StepMonitor(window=10, threshold=2.0, warmup=3)
+    for step in range(50):
+        # jitter well inside the threshold
+        assert m.observe(step, 1.0 + 0.01 * (step % 7)) is None
+    assert m.events == [] and not m.should_rebalance()
+
+
+def test_boundary_is_strict():
+    """Exactly threshold x median is NOT a stall (strict >)."""
+    m = StepMonitor(window=10, threshold=2.0, warmup=3)
+    for step in range(3):
+        m.observe(step, 1.0)
+    assert m.observe(3, 2.0) is None
+    assert m.observe(4, 2.0 + 1e-9) is not None
+
+
+def test_recovery_resets_flagging():
+    """After a stall, steps back at the baseline do not keep flagging —
+    the median absorbs the outlier instead of chasing it."""
+    m = StepMonitor(window=20, threshold=2.0, warmup=3)
+    for step in range(5):
+        m.observe(step, 1.0)
+    assert m.observe(5, 4.0) is not None
+    for step in range(6, 16):
+        assert m.observe(step, 1.0) is None
+    assert len(m.events) == 1
+    assert m.median_s == 1.0
+    # ... and a NEW stall after recovery still triggers
+    assert m.observe(16, 4.0) is not None
+
+
+def test_should_rebalance_needs_persistent_stalls_in_one_window():
+    m = StepMonitor(window=8, threshold=2.0, warmup=3)
+    for step in range(5):
+        m.observe(step, 1.0)
+    # two stalls: below the default patience of 3
+    m.observe(5, 3.0)
+    m.observe(6, 3.0)
+    assert not m.should_rebalance()
+    m.observe(7, 3.0)
+    assert m.should_rebalance()  # 3 events inside one window
+    assert m.should_rebalance(patience=2)
+    assert not m.should_rebalance(patience=4)
+
+
+def test_should_rebalance_ignores_stalls_spread_across_windows():
+    """Three one-off hiccups far apart are noise, not a slow host."""
+    m = StepMonitor(window=5, threshold=2.0, warmup=3)
+    step = 0
+    for _ in range(3):
+        for _ in range(9):  # long fast stretch between hiccups
+            m.observe(step, 1.0)
+            step += 1
+        m.observe(step, 10.0)
+        step += 1
+    assert len(m.events) == 3
+    assert not m.should_rebalance()  # events span >> one window
+
+
+def test_stop_without_start_is_a_no_op():
+    m = StepMonitor()
+    assert m.stop() is None
+    assert len(m.times) == 0 and not m.events
+
+
+def test_start_stop_wall_clock_path():
+    m = StepMonitor(warmup=1)
+    m.start()
+    ev = m.stop()  # warmup: never an event, but the duration is recorded
+    assert ev is None and len(m.times) == 1 and m.times[0] >= 0.0
+    assert m.median_s == m.times[0]
+
+
+def test_empty_monitor_median_is_zero():
+    assert StepMonitor().median_s == 0.0
+
+
+def test_rebalance_policy_shaves_and_conserves_weight():
+    pol = RebalancePolicy(num_shards=4, shave=0.25)
+    w = pol.apply(slow_shard=2)
+    assert w[2] == 0.75
+    assert abs(sum(w) - 4.0) < 1e-12  # total batch share is conserved
+    assert all(abs(wi - (1.0 + 0.25 / 3)) < 1e-12
+               for i, wi in enumerate(w) if i != 2)
