@@ -19,6 +19,19 @@ executables exist to remove.  Results land in ``BENCH_serve.json``;
 every tracked case, zero steady-state compiles, and at least one case
 with >= 64 streams) for CI without re-running the bench, mirroring
 ``train_bench --check``.
+
+Two robustness rows ride along with the throughput cases:
+
+* ``serve-overload-b32`` offers more traffic than ``max_pending`` admits
+  each round and measures what overload control delivers: a real shed
+  rate (structured ``reason='overloaded'`` rejections, not timeouts) and
+  a bounded p99 for the requests that WERE admitted.
+* ``serve-chaos-refit`` injects a hard online re-fit failure through the
+  shared fault harness (``repro.testing.faults``) at the fused-kernel
+  seam, drives traffic through the degraded window, lifts the fault and
+  drives to recovery — the service must keep answering from last-good
+  weights throughout (zero request failures, zero steady-state
+  compiles), then re-fit again.
 """
 from __future__ import annotations
 
@@ -50,6 +63,18 @@ REFIT_EVERY = 64
 REQS_MIN = 200.0
 MIN_TRACKED_STREAMS = 64
 
+# Overload row: 64 offers/round against max_pending=24 must shed most of
+# the excess (the dev host sheds ~60%; 5% trips only if shedding broke)
+# while the admitted requests keep a sane tail — 1s is ~3 orders above
+# the measured p99, so it trips on a stall, not on jitter.
+OVERLOAD_CASE = ("serve-overload-b32", 32, 24, 64, 6)  # batch, max_pending, offered/round, rounds
+SHED_MIN = 0.05
+P99_OVERLOAD_MAX_MS = 1000.0
+
+# Chaos row: the injected re-fit outage must register (>= 1 failed
+# window), never fail a request, and fully recover once lifted.
+CHAOS_CASE = ("serve-chaos-refit", 8, 16)  # batch, streams
+
 
 def _fleet():
     from repro.core import simulator
@@ -68,9 +93,33 @@ def _fleet():
     return cfgs
 
 
-def run_case(name: str, batch: int, streams: int, requests: int) -> dict:
-    from jax._src import compiler as _compiler
+class _CompileSpy:
+    """Steady-state compile counter at the suite's ``compile_counter``
+    seam (``jax._src.compiler.backend_compile`` — the one funnel below
+    jit / AOT lowering).  Install AFTER ``service.warmup()``."""
 
+    def __init__(self):
+        self.count = 0
+
+    def __enter__(self):
+        from jax._src import compiler as _compiler
+
+        self._compiler = _compiler
+        self._orig = _compiler.backend_compile
+
+        def spy(*args, **kwargs):
+            self.count += 1
+            return self._orig(*args, **kwargs)
+
+        _compiler.backend_compile = spy
+        return self
+
+    def __exit__(self, *exc):
+        self._compiler.backend_compile = self._orig
+        return False
+
+
+def run_case(name: str, batch: int, streams: int, requests: int) -> dict:
     from repro.serve import ClusteringService
 
     service = ClusteringService(
@@ -79,22 +128,10 @@ def run_case(name: str, batch: int, streams: int, requests: int) -> dict:
     )
     warm = service.warmup()
 
-    # steady-state compile counting starts AFTER warmup, at the suite's
-    # compile_counter seam: backend_compile is the one funnel every jit
-    # and lower().compile() goes through
-    compiles = 0
-    orig = _compiler.backend_compile
-
-    def spy(*args, **kwargs):
-        nonlocal compiles
-        compiles += 1
-        return orig(*args, **kwargs)
-
     rngs = [np.random.default_rng(s) for s in range(streams)]
     names = service.designs()
     handles = []
-    _compiler.backend_compile = spy
-    try:
+    with _CompileSpy() as spy:
         t0 = time.perf_counter()
         for _ in range(requests):
             for s, rng in enumerate(rngs):
@@ -103,8 +140,7 @@ def run_case(name: str, batch: int, streams: int, requests: int) -> dict:
                 ))
         service.flush()
         elapsed = time.perf_counter() - t0
-    finally:
-        _compiler.backend_compile = orig
+    compiles = spy.count
 
     lat = sorted(h.result().latency_s for h in handles)
     stats = service.stats()
@@ -121,6 +157,127 @@ def run_case(name: str, batch: int, streams: int, requests: int) -> dict:
         "p50_ms": lat[n // 2] * 1e3,
         "p99_ms": lat[min(n - 1, int(n * 0.99))] * 1e3,
         "refits": stats.refits,
+        "compiles_after_warmup": compiles,
+    }
+
+
+def run_overload_case() -> dict:
+    """Offer more traffic per round than the bounded queue admits; measure
+    the shed rate and the served requests' tail latency under overload."""
+    from repro.serve import ClusteringService, RequestRejected
+
+    name, batch, max_pending, offered_per_round, rounds = OVERLOAD_CASE
+    service = ClusteringService(
+        _fleet(), batch_size=batch, refit_every=REFIT_EVERY,
+        refit_window=max(batch, REFIT_EVERY), seed=0, waste_cap=2.0,
+        max_pending=max_pending,
+    )
+    warm = service.warmup()
+
+    rngs = [np.random.default_rng(s) for s in range(offered_per_round)]
+    names = service.designs()
+    handles = []
+    shed_overloaded = 0
+    with _CompileSpy() as spy:
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            # a burst far above capacity: max_pending < batch, so nothing
+            # auto-executes mid-burst and the tail of every burst sheds
+            for s, rng in enumerate(rngs):
+                try:
+                    handles.append(service.submit(
+                        rng.normal(size=LENGTH), names[s % len(names)]
+                    ))
+                except RequestRejected as e:
+                    assert e.reason == "overloaded", e
+                    shed_overloaded += 1
+            service.flush()
+        elapsed = time.perf_counter() - t0
+    compiles = spy.count
+
+    lat = sorted(h.result().latency_s for h in handles)
+    stats = service.stats()
+    assert stats.served == len(handles) and not stats.failed, stats
+    assert stats.rejections.get("overloaded", 0) == shed_overloaded
+    offered = rounds * offered_per_round
+    n = len(lat)
+    return {
+        "case": name,
+        "batch": batch,
+        "max_pending": max_pending,
+        "streams": offered_per_round,
+        "offered": offered,
+        "requests": n,
+        "buckets": warm["buckets"],
+        "shed_rate": shed_overloaded / offered,
+        "reqs_per_sec": n / max(elapsed, 1e-9),
+        "us_per_request": elapsed * 1e6 / max(n, 1),
+        "p50_ms": lat[n // 2] * 1e3,
+        "p99_ms": lat[min(n - 1, int(n * 0.99))] * 1e3,
+        "compiles_after_warmup": compiles,
+    }
+
+
+def run_chaos_case() -> dict:
+    """Inject a hard online re-fit failure at the fused-kernel seam, drive
+    traffic through the degraded window (the service must keep answering
+    from last-good weights), lift the fault and drive to recovery."""
+    from repro.serve import ClusteringService
+    from repro.testing import faults
+
+    name, batch, streams = CHAOS_CASE
+    refit_every = batch  # one re-fit decision per bucket per round
+    service = ClusteringService(
+        _fleet(), batch_size=batch, refit_every=refit_every,
+        refit_window=batch, seed=0, waste_cap=2.0,
+    )
+    warm = service.warmup()
+    buckets = warm["buckets"]
+
+    rngs = [np.random.default_rng(s) for s in range(streams)]
+    names = service.designs()
+    handles = []
+
+    def drive_round():
+        for s, rng in enumerate(rngs):
+            handles.append(service.submit(
+                rng.normal(size=LENGTH), names[s % len(names)]
+            ))
+        service.flush()
+
+    with _CompileSpy() as spy:
+        t0 = time.perf_counter()
+        # phase 1: the re-fit path is down hard; serving must not be
+        with faults.injected("fit_scan_padded", faults.fail_always,
+                             detail="chaos: refit executable down"):
+            for _ in range(8):
+                drive_round()
+        mid = service.stats()
+        # phase 2: fault lifted; cooldown expires, re-fits commit again
+        lift_rounds = 0
+        while service.stats().degraded and lift_rounds < 40:
+            drive_round()
+            lift_rounds += 1
+        elapsed = time.perf_counter() - t0
+    compiles = spy.count
+
+    stats = service.stats()
+    assert stats.served == len(handles) and not stats.failed, stats
+    assert mid.degraded == buckets, mid  # every bucket degraded under injection
+    n = len(handles)
+    return {
+        "case": name,
+        "batch": batch,
+        "streams": streams,
+        "requests": n,
+        "buckets": buckets,
+        "reqs_per_sec": n / max(elapsed, 1e-9),
+        "us_per_request": elapsed * 1e6 / max(n, 1),
+        "refit_failures": stats.refit_failures,
+        "recoveries": stats.recoveries,
+        "degraded_at_end": stats.degraded,
+        "failed": stats.failed,
+        "lift_rounds": lift_rounds,
         "compiles_after_warmup": compiles,
     }
 
@@ -157,8 +314,72 @@ def check() -> int:
                 f"(must be 0 after warmup)"
             )
             failed = 1
+
+    ov = rows.get(OVERLOAD_CASE[0])
+    if ov is None:
+        print(f"CHECK-FAIL: overload case {OVERLOAD_CASE[0]} missing")
+        failed = 1
+    else:
+        if ov["shed_rate"] < SHED_MIN:
+            print(
+                f"CHECK-FAIL: {ov['case']} shed rate {ov['shed_rate']:.3f} "
+                f"< {SHED_MIN} — overload control is not shedding"
+            )
+            failed = 1
+        if ov["p99_ms"] > P99_OVERLOAD_MAX_MS:
+            print(
+                f"CHECK-FAIL: {ov['case']} p99 {ov['p99_ms']:.1f} ms > "
+                f"{P99_OVERLOAD_MAX_MS:.0f} ms under overload"
+            )
+            failed = 1
+        if ov["reqs_per_sec"] < REQS_MIN:
+            print(
+                f"CHECK-FAIL: {ov['case']} served "
+                f"{ov['reqs_per_sec']:.0f} req/s < {REQS_MIN:.0f} floor"
+            )
+            failed = 1
+        if ov["compiles_after_warmup"] != 0:
+            print(
+                f"CHECK-FAIL: {ov['case']} compiled under overload "
+                f"({ov['compiles_after_warmup']})"
+            )
+            failed = 1
+
+    ch = rows.get(CHAOS_CASE[0])
+    if ch is None:
+        print(f"CHECK-FAIL: chaos case {CHAOS_CASE[0]} missing")
+        failed = 1
+    else:
+        if ch["refit_failures"] < 1:
+            print(
+                f"CHECK-FAIL: {ch['case']} registered no re-fit failures — "
+                "the injected outage did not land"
+            )
+            failed = 1
+        if ch["recoveries"] < 1 or ch["degraded_at_end"]:
+            print(
+                f"CHECK-FAIL: {ch['case']} did not recover "
+                f"(recoveries={ch['recoveries']}, "
+                f"degraded_at_end={ch['degraded_at_end']})"
+            )
+            failed = 1
+        if ch["failed"]:
+            print(
+                f"CHECK-FAIL: {ch['case']} failed {ch['failed']} requests "
+                "during the re-fit outage (must serve from last-good "
+                "weights)"
+            )
+            failed = 1
+        if ch["compiles_after_warmup"] != 0:
+            print(
+                f"CHECK-FAIL: {ch['case']} compiled during the outage "
+                f"({ch['compiles_after_warmup']})"
+            )
+            failed = 1
+
     if not failed:
-        print(f"serve bench floors OK for {', '.join(n for n, *_ in CASES)}")
+        tracked = [n for n, *_ in CASES] + [OVERLOAD_CASE[0], CHAOS_CASE[0]]
+        print(f"serve bench floors OK for {', '.join(tracked)}")
     return failed
 
 
@@ -183,16 +404,41 @@ def main(argv=None) -> None:
             f"{r['p99_ms']:.2f} | {r['refits']} | "
             f"{r['compiles_after_warmup']} |"
         )
+    ov = run_overload_case()
+    print(
+        f"\n{ov['case']}: offered {ov['offered']}, served {ov['requests']} "
+        f"({ov['shed_rate']:.0%} shed), p99 {ov['p99_ms']:.2f} ms, "
+        f"{ov['reqs_per_sec']:.0f} req/s, "
+        f"compiles {ov['compiles_after_warmup']}"
+    )
+    ch = run_chaos_case()
+    print(
+        f"{ch['case']}: {ch['requests']} served through "
+        f"{ch['refit_failures']} failed re-fit window(s), "
+        f"{ch['recoveries']} recovery(ies) after {ch['lift_rounds']} "
+        f"round(s), failed {ch['failed']}, "
+        f"compiles {ch['compiles_after_warmup']}"
+    )
+    rows += [ov, ch]
     out = pathlib.Path("BENCH_serve.json")
     out.write_text(json.dumps(rows, indent=2) + "\n")
     print(f"wrote {out.resolve()}")
     for r in rows:
-        emit(
-            f"serve/{r['case']}", r["us_per_request"],
-            f"rps={r['reqs_per_sec']:.0f} p50={r['p50_ms']:.2f}ms "
-            f"p99={r['p99_ms']:.2f}ms compiles={r['compiles_after_warmup']}",
+        extra = (
+            f"rps={r['reqs_per_sec']:.0f} "
+            f"compiles={r['compiles_after_warmup']}"
         )
-    for r in rows:
+        if "shed_rate" in r:
+            extra += f" shed={r['shed_rate']:.2f} p99={r['p99_ms']:.2f}ms"
+        elif "recoveries" in r:
+            extra += (
+                f" refit_failures={r['refit_failures']} "
+                f"recoveries={r['recoveries']}"
+            )
+        else:
+            extra += f" p50={r['p50_ms']:.2f}ms p99={r['p99_ms']:.2f}ms"
+        emit(f"serve/{r['case']}", r["us_per_request"], extra)
+    for r in rows[: len(CASES)]:
         if r["reqs_per_sec"] < REQS_MIN:
             print(
                 f"REGRESSION: {r['case']} {r['reqs_per_sec']:.0f} req/s "

@@ -117,6 +117,21 @@ class ColumnConfig:
         )
 
 
+def column_config_from_dict(d: dict) -> ColumnConfig:
+    """Inverse of ``dataclasses.asdict(ColumnConfig(...))`` — the config
+    serialization used by the DSE journal and the serving durability
+    metadata, whose recovery paths must reconstruct the exact config
+    (every field is an int/float/str, so the JSON round trip is exact)."""
+    return ColumnConfig(
+        p=int(d["p"]),
+        q=int(d["q"]),
+        t_max=int(d["t_max"]),
+        neuron=NeuronConfig(**d["neuron"]),
+        wta=WTAConfig(**d["wta"]),
+        stdp=STDPConfig(**d["stdp"]),
+    )
+
+
 @dataclasses.dataclass(frozen=True)
 class LayerConfig:
     """One layer of a multi-layer TNN: a grid of columns.

@@ -18,7 +18,9 @@ Layout (one directory per step):
 
 The write-then-rename atomic-publish protocol here is also the durability
 story of the DSE journal (``repro.dse.journal``), which applies it per
-appended record batch instead of per checkpoint step.
+appended record batch instead of per checkpoint step, and of the
+streaming service's live-weight snapshots (``repro.serve.durability``),
+which pair a ``Checkpointer`` with a between-snapshots re-fit WAL.
 """
 from __future__ import annotations
 
@@ -108,6 +110,32 @@ class Checkpointer:
         if self._error is not None:
             e, self._error = self._error, None
             raise e
+
+    # ---------------- introspection / retention ----------------
+    def steps(self) -> list:
+        """Published snapshot steps, ascending (``.tmp`` dirs excluded —
+        an in-flight or preempted save is never listed)."""
+        out = []
+        for name in os.listdir(self.root):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name[len("step_"):]))
+                except ValueError:
+                    continue
+        return sorted(out)
+
+    def prune(self, keep: int = 2) -> None:
+        """Delete all but the newest ``keep`` published snapshots.  The
+        serving snapshot+WAL loop calls this after each publish so a
+        long-lived service's disk footprint stays bounded; ``LATEST``
+        always points at the newest snapshot, which is always kept."""
+        if keep < 1:
+            raise ValueError("prune must keep at least one snapshot")
+        self.wait()
+        for step in self.steps()[:-keep]:
+            shutil.rmtree(
+                os.path.join(self.root, f"step_{step}"), ignore_errors=True
+            )
 
     # ---------------- restore ----------------
     def latest_step(self) -> Optional[int]:

@@ -25,10 +25,18 @@ class StragglerEvent:
     duration_s: float
     median_s: float
     ratio: float
+    label: str = ""  # pipeline stage ('assign', 'refit', ...) or ""
 
 
 class StepMonitor:
-    """EWMA/median hybrid step-time monitor with an outlier threshold."""
+    """EWMA/median hybrid step-time monitor with an outlier threshold.
+
+    ``start(label=...)`` tags the step with a pipeline stage so a
+    multi-stage consumer (the streaming service times its assignment
+    batches and online re-fits through one monitor) can attribute a
+    flagged stall; the label is observability metadata only — the
+    outlier threshold compares against the pooled median.
+    """
 
     def __init__(self, window: int = 50, threshold: float = 2.0, warmup: int = 5):
         self.window = window
@@ -37,10 +45,12 @@ class StepMonitor:
         self.times: deque = deque(maxlen=window)
         self.events: list = []
         self._t0: Optional[float] = None
+        self._label = ""
         self._step = 0
 
-    def start(self) -> None:
+    def start(self, label: str = "") -> None:
         self._t0 = time.perf_counter()
+        self._label = label
 
     def stop(self) -> Optional[StragglerEvent]:
         if self._t0 is None:
@@ -48,15 +58,19 @@ class StepMonitor:
         dt = time.perf_counter() - self._t0
         self._t0 = None
         self._step += 1
-        return self.observe(self._step, dt)
+        return self.observe(self._step, dt, label=self._label)
 
-    def observe(self, step: int, duration_s: float) -> Optional[StragglerEvent]:
+    def observe(
+        self, step: int, duration_s: float, label: str = ""
+    ) -> Optional[StragglerEvent]:
         """Record a step duration; returns an event if it is a straggler."""
         ev = None
         if len(self.times) >= self.warmup:
             med = sorted(self.times)[len(self.times) // 2]
             if med > 0 and duration_s > self.threshold * med:
-                ev = StragglerEvent(step, duration_s, med, duration_s / med)
+                ev = StragglerEvent(
+                    step, duration_s, med, duration_s / med, label
+                )
                 self.events.append(ev)
         self.times.append(duration_s)
         return ev

@@ -9,14 +9,23 @@ executable and ONE re-fit executable resident through the AOT front doors
 latency-encoded and micro-batched by envelope into the grid-batched
 assignment fire, and the live weights keep learning via periodic online
 STDP re-fits that resume the fused scan from the served stream (the
-donated-weight contract).  See ``docs/serving.md``.
+donated-weight contract).  With a ``durable_dir`` the service is also
+crash-safe: live-weight snapshots plus a re-fit volley WAL
+(``serve.durability``) let ``ClusteringService.recover(dir)`` restore
+weights bit-identical to the uninterrupted service.  Admission is
+overload-safe — bounded queues and per-request deadline budgets shed
+structured ``RequestRejected`` / ``ServeShed`` before any JAX work — and
+failed re-fits degrade to serving from last-good weights instead of
+taking the service down.  See ``docs/serving.md``.
 """
+from repro.serve import durability
 from repro.serve.service import (
     ClusteringService,
     PendingRequest,
     RequestRejected,
     ServeFailure,
     ServeResult,
+    ServeShed,
     ServeStats,
 )
 
@@ -26,5 +35,7 @@ __all__ = [
     "RequestRejected",
     "ServeFailure",
     "ServeResult",
+    "ServeShed",
     "ServeStats",
+    "durability",
 ]

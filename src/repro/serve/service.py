@@ -6,7 +6,11 @@ The serving pipeline, stage by stage (each independently testable):
   compiled envelope *before anything touches JAX*: an unknown design, a
   series whose encoded width does not match any compiled bucket, or
   non-finite samples raise a structured ``RequestRejected`` — never a
-  fresh trace.
+  fresh trace.  Admission is also where overload control bites: a
+  bounded pending queue (``max_pending``) sheds with
+  ``reason='overloaded'`` and a retry-after hint, and a per-request
+  deadline budget sheds with ``reason='deadline'`` when the predicted
+  queue wait already exceeds it.
 * **encode** — the series becomes a spike volley via the central encoder
   dispatch (``encoding.encode``), using the target design's gamma window.
 * **bucket dispatch** — designs are packed into shared padding envelopes
@@ -18,15 +22,28 @@ The serving pipeline, stage by stage (each independently testable):
   ``fused_column.pad_stream_silent``) dispatches ONE envelope-keyed AOT
   executable (``backend.assign_padded``).  After ``warmup`` the steady
   state performs zero XLA compiles: executables are keyed on
-  shapes + statics, and the batch geometry never changes.
+  shapes + statics, and the batch geometry never changes.  A request
+  whose deadline expired while queued is shed at dispatch (a structured
+  ``ServeShed``) — before its batch touches JAX.
 * **re-fit** — every ``refit_every`` served requests per bucket, the live
   weights take an online-STDP pass over the most recent
-  ``refit_window`` volleys each design served
-  (``backend.fit_padded`` — the fused scan resumed from live weights via
-  its donated-weight contract).  Ragged buffers are silent-padded: for
+  ``refit_window`` volleys each design served (``backend.fit_padded``).
+  The candidate runs on a *copy* of the live block (the fused scan
+  donates its weight operand, and a failed attempt must never destroy
+  the last-good weights) and commits only if it returns finite weights
+  within the watchdog budget; otherwise the attempt degrades down
+  ``backend.lowering_ladder`` and, if every rung fails, the bucket
+  enters **degraded mode** — serving continues from last-good weights
+  while re-fit attempts back off exponentially
+  (``backend.refit_backoff``).  Ragged buffers are silent-padded: for
   the positive thresholds the service enforces, a silent volley is an
   exact weight no-op, so the re-fit is bit-identical to an offline
   ``fit_padded`` resume on the same volleys.
+* **durability** — with ``durable_dir`` set, every committed re-fit is
+  appended to a volley WAL and every ``snapshot_every`` re-fits the live
+  weights snapshot atomically; ``ClusteringService.recover(dir)``
+  replays WAL re-fits on top of the latest snapshot and restores weights
+  bit-identical to the uninterrupted service (``serve.durability``).
 
 Failures quarantine per request: if a batch raises, each live request
 re-runs alone against the same executable (assignment is per-volley
@@ -36,13 +53,14 @@ run) and only the poisoned request surfaces a ``ServeFailure``.
 The service is synchronous and single-threaded; "concurrent streams" are
 interleaved logical streams multiplexed by the caller (see
 ``benchmarks/serve_bench.py``, which sustains 64+ of them).  Stage
-timings feed a ``distributed.straggler.StepMonitor`` so stalls are
-observable through ``stats()``.
+timings feed a ``distributed.straggler.StepMonitor`` (stages labelled
+``'assign'`` / ``'refit'``) so stalls are observable through ``stats()``.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Mapping, Optional, Sequence, Union
 
 import jax
@@ -52,9 +70,10 @@ import numpy as np
 from repro.core import backend as backend_lib
 from repro.core import column as column_lib
 from repro.core import encoding
-from repro.core.types import ColumnConfig, TIME_DTYPE
+from repro.core.types import ColumnConfig, TIME_DTYPE, column_config_from_dict
 from repro.distributed.straggler import StepMonitor
 from repro.kernels import fused_column
+from repro.serve import durability
 
 
 class RequestRejected(Exception):
@@ -62,14 +81,20 @@ class RequestRejected(Exception):
     work happens, so a bad request can never trigger a trace storm.
 
     ``reason`` is machine-readable: ``'unknown-design'``, ``'shape'``,
-    ``'envelope'`` (encoded width fits no compiled bucket) or
-    ``'non-finite'``.
+    ``'envelope'`` (encoded width fits no compiled bucket),
+    ``'non-finite'``, ``'overloaded'`` (bounded queue full),
+    ``'deadline'`` (predicted wait exceeds the request's budget) or
+    ``'draining'`` (the service is shutting down).  Load-shedding
+    rejections carry ``retry_after_s``, a hint for when capacity should
+    free up.
     """
 
-    def __init__(self, reason: str, detail: str):
+    def __init__(self, reason: str, detail: str,
+                 retry_after_s: Optional[float] = None):
         super().__init__(f"{reason}: {detail}")
         self.reason = reason
         self.detail = detail
+        self.retry_after_s = retry_after_s
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,16 +121,37 @@ class ServeFailure:
 
 
 @dataclasses.dataclass(frozen=True)
+class ServeShed:
+    """A request shed at dispatch: admitted, but its deadline expired
+    while it queued — no JAX work was spent on it."""
+
+    request_id: int
+    design: str
+    reason: str
+    waited_s: float
+
+
+@dataclasses.dataclass(frozen=True)
 class ServeStats:
-    submitted: int
+    offered: int          # every submit() call, accepted or not
+    submitted: int        # admitted into a queue
     served: int
-    rejected: int
+    rejected: int         # admission rejections, total
+    rejections: dict      # per-reason admission rejection counts
+    shed: int             # admitted but deadline-expired at dispatch
     failed: int
     batches: int
     isolations: int
-    refits: int
+    refits: int           # committed online re-fits
+    refit_failures: int   # re-fit windows where every ladder rung failed
+    refit_stalls: int     # rung attempts discarded by the watchdog budget
+    recoveries: int       # degraded buckets that re-fit successfully again
+    degraded: int         # buckets currently serving from last-good weights
     stalls: int
     pending: int
+    snapshots: int        # snapshots published this process
+    wal_records: int      # WAL re-fits not yet covered by a snapshot
+    replayed: int         # WAL re-fits replayed during recover()
 
 
 class PendingRequest:
@@ -116,13 +162,15 @@ class PendingRequest:
         self._service = service
         self.id = rid
         self.design = design
-        self.outcome: Optional[Union[ServeResult, ServeFailure]] = None
+        self.outcome: Optional[
+            Union[ServeResult, ServeFailure, ServeShed]
+        ] = None
 
     @property
     def done(self) -> bool:
         return self.outcome is not None
 
-    def result(self) -> Union[ServeResult, ServeFailure]:
+    def result(self) -> Union[ServeResult, ServeFailure, ServeShed]:
         if self.outcome is None:
             self._service.flush(self.design)
         assert self.outcome is not None
@@ -130,23 +178,26 @@ class PendingRequest:
 
 
 class _Request:
-    __slots__ = ("pending", "lane", "enc", "t_submit")
+    __slots__ = ("pending", "lane", "enc", "t_submit", "deadline")
 
-    def __init__(self, pending, lane, enc, t_submit):
+    def __init__(self, pending, lane, enc, t_submit, deadline):
         self.pending = pending
         self.lane = lane
         self.enc = enc
         self.t_submit = t_submit
+        self.deadline = deadline
 
 
 class _Bucket:
-    """One envelope bucket: live weights + compiled-shape metadata + queue."""
+    """One envelope bucket: live weights + compiled-shape metadata + queue
+    + degraded-mode state."""
 
-    def __init__(self, envelope, names, cfgs, w0):
+    def __init__(self, index, envelope, names, cfgs, w0):
+        self.index = index
         self.envelope = envelope  # (p_env, q_env, t_window)
         self.names = list(names)
         self.cfgs = list(cfgs)
-        self.w = w0  # [Db, p_env, q_env] jnp — donated through every re-fit
+        self.w = w0  # [Db, p_env, q_env] jnp — replaced by every re-fit
         self.thresholds = jnp.asarray(
             [c.neuron.threshold for c in cfgs], jnp.float32
         )
@@ -160,6 +211,13 @@ class _Bucket:
         self.queue: list[_Request] = []
         self.buffers: list[list[np.ndarray]] = [[] for _ in cfgs]
         self.served_since_refit = 0
+        # degraded-mode state: after every ladder rung fails a re-fit
+        # window, the bucket keeps serving from the last-good weights and
+        # sits out `cooldown` re-fit windows before retrying
+        self.degraded = False
+        self.failed_refits = 0
+        self.cooldown = 0
+        self.last_refit_errors: list[str] = []
 
 
 def _design_map(
@@ -192,6 +250,25 @@ class ClusteringService:
       weights: optional ``{name: [p, q] array}`` initial weights (e.g.
         from an offline ``cluster_time_series`` fit); designs without an
         entry draw ``column.init_params`` from ``fold_in(seed, index)``.
+      max_pending: bound on the total queued (unexecuted) requests across
+        all buckets; beyond it ``submit`` sheds with
+        ``RequestRejected(reason='overloaded')`` and a retry-after hint.
+        ``None`` (default) leaves admission unbounded.
+      default_deadline_s: deadline budget applied to every request that
+        does not pass its own ``deadline_s``; a request whose predicted
+        queue wait exceeds its budget is shed at admission
+        (``reason='deadline'``), and one whose budget expires while
+        queued is shed at dispatch (a ``ServeShed`` outcome) — either
+        way, before any JAX work is spent on it.
+      refit_budget_s: watchdog budget for one re-fit attempt; an attempt
+        exceeding it is discarded as stalled (the rung's result is
+        thrown away) and the ladder moves on.  ``None`` disables the
+        budget.
+      durable_dir: directory for crash durability (snapshots + re-fit
+        WAL — see ``serve.durability``).  Must be fresh; resume an
+        existing one with ``ClusteringService.recover(dir)``.
+      snapshot_every: committed re-fits between snapshots (with
+        ``durable_dir``); the WAL covers the gap.
       monitor: a ``StepMonitor`` for stage timings (one is created by
         default; stalls surface in ``stats()``).
     """
@@ -209,7 +286,13 @@ class ClusteringService:
         weights: Optional[Mapping[str, np.ndarray]] = None,
         waste_cap: Optional[float] = None,
         max_bucket: Optional[int] = None,
+        max_pending: Optional[int] = None,
+        default_deadline_s: Optional[float] = None,
+        refit_budget_s: Optional[float] = None,
+        durable_dir: Optional[str] = None,
+        snapshot_every: int = 4,
         monitor: Optional[StepMonitor] = None,
+        _attach: bool = False,
     ):
         cfg_map = _design_map(designs)
         if not cfg_map:
@@ -218,6 +301,10 @@ class ClusteringService:
             raise ValueError("batch_size must be >= 1")
         if refit_window < 1:
             raise ValueError("refit_window must be >= 1")
+        if max_pending is not None and max_pending < 1:
+            raise ValueError("max_pending must be >= 1 (or None)")
+        if snapshot_every < 1:
+            raise ValueError("snapshot_every must be >= 1")
         # unknown encoder raises here, at construction
         encoding.encoded_width(1, encoder)
         self.encoder = encoder
@@ -225,6 +312,13 @@ class ClusteringService:
         self.refit_every = int(refit_every)
         self.refit_window = int(refit_window)
         self.refit_epochs = int(refit_epochs)
+        self.max_pending = max_pending
+        self.default_deadline_s = default_deadline_s
+        self.refit_budget_s = refit_budget_s
+        self.snapshot_every = int(snapshot_every)
+        self._seed = int(seed)
+        self._waste_cap = waste_cap
+        self._max_bucket = max_bucket
         self.monitor = monitor if monitor is not None else StepMonitor(
             threshold=4.0, warmup=3
         )
@@ -271,7 +365,7 @@ class ClusteringService:
         key = jax.random.key(seed)
         self._buckets: list[_Bucket] = []
         self._route: dict[str, tuple[_Bucket, int]] = {}
-        for env, members in buckets:
+        for bi, (env, members) in enumerate(buckets):
             p_env, q_env, t_window = env
             w0 = np.zeros((len(members), p_env, q_env), np.float32)
             for lane, i in enumerate(members):
@@ -291,7 +385,7 @@ class ClusteringService:
                     )
                 w0[lane, : c.p, : c.q] = wi
             bucket = _Bucket(
-                env, [names[i] for i in members],
+                bi, env, [names[i] for i in members],
                 [cfgs[i] for i in members], jnp.asarray(w0),
             )
             self._buckets.append(bucket)
@@ -299,13 +393,171 @@ class ClusteringService:
                 self._route[names[i]] = (bucket, lane)
 
         self._next_id = 0
+        self._offered = 0
         self._submitted = 0
         self._served = 0
         self._rejected = 0
+        self._rejections: dict[str, int] = {}
+        self._shed = 0
         self._failed = 0
         self._batches = 0
         self._isolations = 0
         self._refits = 0
+        self._refit_failures = 0
+        self._refit_stalls = 0
+        self._recoveries = 0
+        self._snapshots = 0
+        self._replayed = 0
+        self._refit_seq = 0
+        self._batch_ewma: Optional[float] = None
+        self._draining = False
+
+        # ---- durability: fresh directories get meta + WAL header + a
+        # seq-0 snapshot of the initial weights; recover() attaches to an
+        # existing directory, restores the latest snapshot and replays
+        # the WAL tail (bit-identical — weights only ever mutate at
+        # committed re-fits, and each WAL record is one committed
+        # re-fit's exact input window)
+        self._store: Optional[durability.DurableStore] = None
+        if durable_dir is not None:
+            spec = self._replay_spec()
+            fingerprint = durability.service_fingerprint(spec)
+            store = durability.DurableStore(durable_dir)
+            if _attach:
+                step, records = store.attach(fingerprint)
+                blocks, _ = store.ckpt.restore(
+                    [b.w for b in self._buckets], step=step
+                )
+                for b, wb in zip(self._buckets, blocks):
+                    self._commit_weights(b, wb)
+                self._store = store
+                self._refit_seq = step
+                for rec in records:
+                    self._replay(rec)
+            else:
+                store.create(
+                    {
+                        "version": durability.DURABLE_VERSION,
+                        "fingerprint": fingerprint,
+                        "spec": spec,
+                        "serving": {
+                            "batch_size": self.batch_size,
+                            "refit_every": self.refit_every,
+                            "snapshot_every": self.snapshot_every,
+                            "max_pending": self.max_pending,
+                            "default_deadline_s": self.default_deadline_s,
+                            "refit_budget_s": self.refit_budget_s,
+                        },
+                    },
+                    [b.w for b in self._buckets],
+                )
+                self._store = store
+
+    # -------------------------------------------------------- durability
+    def _replay_spec(self) -> dict:
+        """The replay-relevant service identity: everything that pins
+        bucket structure, init weights and re-fit semantics — NOT the
+        serving knobs (batch size, deadlines...), which a recovered
+        service may legitimately change."""
+        return {
+            "names": list(self._cfgs),
+            "cfgs": [dataclasses.asdict(c) for c in self._cfgs.values()],
+            "encoder": self.encoder,
+            "seed": self._seed,
+            "refit_window": self.refit_window,
+            "refit_epochs": self.refit_epochs,
+            "waste_cap": self._waste_cap,
+            "max_bucket": self._max_bucket,
+            "statics": {
+                k: v for k, v in self._statics.items()
+            },
+        }
+
+    @classmethod
+    def recover(cls, durable_dir: str, *, monitor: Optional[StepMonitor] =
+                None, **overrides) -> "ClusteringService":
+        """Rebuild a service from its durable directory: reconstruct the
+        fleet from ``meta.json``, restore the latest published snapshot,
+        and replay the WAL's committed re-fits on top — weights come back
+        **bit-identical** to the uninterrupted service at its last
+        committed re-fit (a kill loses at most the re-fit in flight, and
+        the served-but-unrefit volley buffers).
+
+        Serving knobs (``batch_size``, ``max_pending``, deadlines, ...)
+        default to the values recorded at creation; pass ``overrides`` to
+        change them.  Call ``warmup()`` on the recovered service before
+        taking traffic, as usual.
+        """
+        meta = durability.DurableStore(durable_dir).load_meta()
+        if meta.get("version") != durability.DURABLE_VERSION:
+            raise ValueError(
+                f"{durable_dir}: durable format version "
+                f"{meta.get('version')} != {durability.DURABLE_VERSION}"
+            )
+        spec = meta["spec"]
+        designs = {
+            n: column_config_from_dict(d)
+            for n, d in zip(spec["names"], spec["cfgs"])
+        }
+        kwargs = dict(meta.get("serving", {}))
+        kwargs.update(
+            encoder=spec["encoder"], seed=spec["seed"],
+            refit_window=spec["refit_window"],
+            refit_epochs=spec["refit_epochs"],
+            waste_cap=spec["waste_cap"], max_bucket=spec["max_bucket"],
+        )
+        kwargs.update(overrides)
+        return cls(
+            designs, monitor=monitor, durable_dir=durable_dir,
+            _attach=True, **kwargs,
+        )
+
+    def _replay(self, rec: dict) -> None:
+        """Apply one WAL re-fit record — same ladder, same commit path as
+        the live re-fit, no budget (a recovering process pays compiles
+        here) and no re-logging."""
+        bucket = self._buckets[rec["bucket"]]
+        xs = np.asarray(rec["xs"], np.int32)
+        w_new, _low, errors = self._attempt_window(
+            bucket, xs, ladder=backend_lib.lowering_ladder(
+                bucket.fit_lowering
+            ),
+            label="replay", enforce_budget=False,
+        )
+        if w_new is None:
+            # the record committed in a prior life; failing here means the
+            # environment changed — keep serving from the snapshot weights
+            warnings.warn(
+                f"WAL replay: re-fit seq {rec['seq']} failed every rung "
+                f"({errors}); continuing from pre-record weights"
+            )
+            self._refit_failures += 1
+        else:
+            self._commit_weights(bucket, w_new)
+        self._refit_seq = int(rec["seq"])
+        self._replayed += 1
+
+    def _snapshot(self) -> None:
+        if self._store is None:
+            return
+        self._store.snapshot(
+            self._refit_seq, [b.w for b in self._buckets]
+        )
+        self._snapshots += 1
+
+    def drain(self) -> ServeStats:
+        """Graceful shutdown: stop admission (``submit`` now sheds with
+        ``reason='draining'``), serve every queued request, and publish a
+        final snapshot so recovery replays nothing.  Idempotent; the
+        SIGTERM path of ``launch/serve_tnn.py`` calls this."""
+        self._draining = True
+        self.flush()
+        self._snapshot()
+        return self.stats()
+
+    @property
+    def draining(self) -> bool:
+        return self._draining
 
     # ------------------------------------------------------------- intro
     def designs(self) -> tuple[str, ...]:
@@ -321,6 +573,8 @@ class ClusteringService:
                 "refit_shape": (
                     self.refit_window, len(b.names), b.envelope[0]
                 ),
+                "degraded": b.degraded,
+                "cooldown": b.cooldown,
             }
             for b in self._buckets
         ]
@@ -333,15 +587,25 @@ class ClusteringService:
 
     def stats(self) -> ServeStats:
         return ServeStats(
+            offered=self._offered,
             submitted=self._submitted,
             served=self._served,
             rejected=self._rejected,
+            rejections=dict(self._rejections),
+            shed=self._shed,
             failed=self._failed,
             batches=self._batches,
             isolations=self._isolations,
             refits=self._refits,
+            refit_failures=self._refit_failures,
+            refit_stalls=self._refit_stalls,
+            recoveries=self._recoveries,
+            degraded=sum(1 for b in self._buckets if b.degraded),
             stalls=len(self.monitor.events),
             pending=sum(len(b.queue) for b in self._buckets),
+            snapshots=self._snapshots,
+            wal_records=self._store.pending if self._store else 0,
+            replayed=self._replayed,
         )
 
     # ------------------------------------------------------------ warmup
@@ -393,15 +657,55 @@ class ClusteringService:
         }
 
     # --------------------------------------------------------- admission
-    def submit(self, series, design: str) -> PendingRequest:
+    def _reject(self, reason: str, detail: str,
+                retry_after_s: Optional[float] = None) -> None:
+        self._rejected += 1
+        self._rejections[reason] = self._rejections.get(reason, 0) + 1
+        raise RequestRejected(reason, detail, retry_after_s)
+
+    def _batch_seconds(self) -> float:
+        """Recent EWMA of one batched assignment's wall time (0.0 until
+        the first post-warmup batch lands)."""
+        return self._batch_ewma if self._batch_ewma is not None else 0.0
+
+    def _wait_estimate_s(self, bucket: _Bucket) -> float:
+        """Predicted queue wait for a request admitted to ``bucket`` now:
+        batches ahead of it (its own included) times the recent batch
+        time."""
+        batches_ahead = len(bucket.queue) // self.batch_size + 1
+        return batches_ahead * self._batch_seconds()
+
+    def submit(self, series, design: str,
+               deadline_s: Optional[float] = None) -> PendingRequest:
         """Admit one series for ``design``; raises ``RequestRejected`` on
-        admission failure, returns a ``PendingRequest`` otherwise.  A full
-        bucket queue executes immediately (the returned handle is then
-        already ``done``)."""
+        admission failure (including load shedding), returns a
+        ``PendingRequest`` otherwise.  A full bucket queue executes
+        immediately (the returned handle is then already ``done``).
+
+        ``deadline_s`` is this request's latency budget (defaults to the
+        service-wide ``default_deadline_s``): the request is shed at
+        admission if the predicted queue wait already exceeds it, and at
+        dispatch if it expired while queued.
+        """
+        self._offered += 1
+        if self._draining:
+            self._reject(
+                "draining", "service is draining; no new work accepted"
+            )
+        if self.max_pending is not None:
+            pending = sum(len(b.queue) for b in self._buckets)
+            if pending >= self.max_pending:
+                self._reject(
+                    "overloaded",
+                    f"{pending} pending requests >= max_pending="
+                    f"{self.max_pending}",
+                    retry_after_s=(
+                        pending / self.batch_size
+                    ) * self._batch_seconds(),
+                )
         route = self._route.get(design)
         if route is None:
-            self._rejected += 1
-            raise RequestRejected(
+            self._reject(
                 "unknown-design",
                 f"{design!r} not served (have {sorted(self._route)})",
             )
@@ -409,24 +713,33 @@ class ClusteringService:
         cfg = self._cfgs[design]
         x = np.asarray(series, np.float64)
         if x.ndim != 1:
-            self._rejected += 1
-            raise RequestRejected(
+            self._reject(
                 "shape", f"expected one series [L], got shape {x.shape}"
             )
         width = encoding.encoded_width(x.shape[0], self.encoder)
         if width != cfg.p:
-            self._rejected += 1
-            raise RequestRejected(
+            self._reject(
                 "envelope",
                 f"series of length {x.shape[0]} encodes to width {width}, "
                 f"which no compiled bucket accepts (design {design!r} "
                 f"envelope takes width {cfg.p})",
             )
         if not np.isfinite(x).all():
-            self._rejected += 1
-            raise RequestRejected(
+            self._reject(
                 "non-finite", f"series for {design!r} has non-finite samples"
             )
+        deadline = (
+            deadline_s if deadline_s is not None else self.default_deadline_s
+        )
+        if deadline is not None:
+            est = self._wait_estimate_s(bucket)
+            if est > deadline:
+                self._reject(
+                    "deadline",
+                    f"predicted wait {est:.4f}s exceeds deadline budget "
+                    f"{deadline:.4f}s",
+                    retry_after_s=est,
+                )
         enc = np.asarray(
             encoding.encode(jnp.asarray(x), cfg.t_max, self.encoder)
         )
@@ -434,7 +747,7 @@ class ClusteringService:
         self._next_id += 1
         self._submitted += 1
         bucket.queue.append(
-            _Request(pending, lane, enc, time.perf_counter())
+            _Request(pending, lane, enc, time.perf_counter(), deadline)
         )
         if len(bucket.queue) >= self.batch_size:
             self._execute(bucket)
@@ -478,12 +791,33 @@ class ClusteringService:
         )
         return np.asarray(ids)  # [Db, B]
 
+    def _shed_expired(self, reqs: list[_Request]) -> list[_Request]:
+        """Drop deadline-expired requests from a popped batch BEFORE any
+        JAX work — their budget is already blown, serving them would only
+        delay the live ones."""
+        now = time.perf_counter()
+        live = []
+        for r in reqs:
+            waited = now - r.t_submit
+            if r.deadline is not None and waited > r.deadline:
+                self._shed += 1
+                r.pending.outcome = ServeShed(
+                    r.pending.id, r.pending.design, "deadline", waited
+                )
+            else:
+                live.append(r)
+        return live
+
     def _execute(self, bucket: _Bucket) -> None:
         reqs = bucket.queue[: self.batch_size]
         del bucket.queue[: self.batch_size]
         if not reqs:
             return
-        self.monitor.start()
+        reqs = self._shed_expired(reqs)
+        if not reqs:
+            return
+        self.monitor.start("assign")
+        t0 = time.perf_counter()
         try:
             ids = self._assign(bucket, self._batch_xs(bucket, reqs))
         except Exception:
@@ -492,6 +826,11 @@ class ClusteringService:
             return
         self.monitor.stop()
         done = time.perf_counter()
+        dt = done - t0
+        self._batch_ewma = (
+            dt if self._batch_ewma is None
+            else 0.8 * self._batch_ewma + 0.2 * dt
+        )
         self._batches += 1
         for n, r in enumerate(reqs):
             self._complete(
@@ -510,7 +849,7 @@ class ClusteringService:
         to the batched run; only the poisoned request fails."""
         self._isolations += 1
         for r in reqs:
-            self.monitor.start()
+            self.monitor.start("assign")
             try:
                 ids = self._assign(bucket, self._batch_xs(bucket, [r]))
             except Exception as e:
@@ -558,32 +897,127 @@ class ClusteringService:
                 xs[k, lane, : enc.shape[0]] = enc
         return xs
 
-    def _refit(self, bucket: _Bucket, warm: bool = False) -> None:
-        self.monitor.start()
-        bucket.w = backend_lib.fit_padded(
-            bucket.w, jnp.asarray(self._refit_xs(bucket)),
+    def _fit_window(self, bucket: _Bucket, xs_np: np.ndarray,
+                    lowering: str) -> jnp.ndarray:
+        """One fused online-STDP pass over a host-side window, on a COPY
+        of the live block — ``fit_padded`` donates its weight operand, and
+        a failed or discarded attempt must never destroy the last-good
+        weights (donation is a memory optimization; the copy is
+        value-identical, so commit-on-success keeps the resume contract
+        bit-exact)."""
+        w_new = backend_lib.fit_padded(
+            jnp.array(bucket.w, copy=True), jnp.asarray(xs_np),
             bucket.thresholds, bucket.t_maxes, bucket.q_actives,
             t_window=bucket.envelope[2],
-            epochs=self.refit_epochs, lowering=bucket.fit_lowering,
+            epochs=self.refit_epochs, lowering=lowering,
             **self._statics,
         )
+        return jax.block_until_ready(w_new)
+
+    def _attempt_window(self, bucket: _Bucket, xs_np: np.ndarray, *,
+                        ladder, label: str = "refit",
+                        enforce_budget: bool = True):
+        """Try one re-fit window down ``ladder``; a rung fails on raise,
+        non-finite weights, or (with the watchdog budget enforced) a wall
+        time over ``refit_budget_s``.  Returns ``(w_new, lowering,
+        errors)`` — ``w_new`` is ``None`` when every rung failed."""
+        errors: list[str] = []
+        for low in ladder:
+            self.monitor.start(label)
+            t0 = time.perf_counter()
+            try:
+                w_new = self._fit_window(bucket, xs_np, low)
+            except Exception as e:
+                self.monitor.stop()
+                errors.append(f"{low}: {e!r}")
+                continue
+            self.monitor.stop()
+            dt = time.perf_counter() - t0
+            if (
+                enforce_budget
+                and self.refit_budget_s is not None
+                and dt > self.refit_budget_s
+            ):
+                self._refit_stalls += 1
+                errors.append(
+                    f"{low}: stalled ({dt:.3f}s > refit_budget_s="
+                    f"{self.refit_budget_s:.3f}s) — result discarded"
+                )
+                continue
+            if not bool(jnp.isfinite(w_new).all()):
+                errors.append(f"{low}: non-finite weights (poisoned re-fit)")
+                continue
+            return w_new, low, errors
+        return None, None, errors
+
+    def _commit_weights(self, bucket: _Bucket, w_new) -> None:
+        bucket.w = jnp.asarray(w_new)
         # off the integer grid the assignment lowering stays 'reference'
-        # on every host; re-checking after each re-fit keeps the kernel
+        # on every host; re-checking after each commit keeps the kernel
         # available on TPU should the weights land back on the grid
         bucket.asg_lowering = backend_lib.assign_lowering(
             self._statics["response"], bucket.w[0]
         )
-        self.monitor.stop()
+
+    def _refit(self, bucket: _Bucket, warm: bool = False) -> None:
+        xs = self._refit_xs(bucket)
+        if warm:
+            # warmup's all-silent window: single rung, no budget (first
+            # dispatch may still be cold), no WAL, no counters
+            w_new, _, _ = self._attempt_window(
+                bucket, xs, ladder=(bucket.fit_lowering,),
+                enforce_budget=False,
+            )
+            if w_new is not None:
+                self._commit_weights(bucket, w_new)
+        else:
+            w_new, _low, errors = self._attempt_window(
+                bucket, xs,
+                ladder=backend_lib.lowering_ladder(bucket.fit_lowering),
+            )
+            if w_new is None:
+                # degraded mode: keep serving from last-good weights;
+                # retry after an exponentially growing number of windows
+                self._refit_failures += 1
+                bucket.failed_refits += 1
+                bucket.cooldown = backend_lib.refit_backoff(
+                    bucket.failed_refits
+                )
+                bucket.degraded = True
+                bucket.last_refit_errors = errors
+            else:
+                self._commit_weights(bucket, w_new)
+                self._refits += 1
+                self._refit_seq += 1
+                if bucket.degraded:
+                    bucket.degraded = False
+                    bucket.failed_refits = 0
+                    bucket.cooldown = 0
+                    bucket.last_refit_errors = []
+                    self._recoveries += 1
+                if self._store is not None:
+                    self._store.log_refit(
+                        self._refit_seq, bucket.index, self.refit_epochs,
+                        _low, xs,
+                    )
+                    if self._refit_seq % self.snapshot_every == 0:
+                        self._snapshot()
         for buf in bucket.buffers:
             buf.clear()
         bucket.served_since_refit = 0
-        if not warm:
-            self._refits += 1
 
     def _maybe_refit(self, bucket: _Bucket) -> None:
         if (
-            self.refit_every > 0
-            and bucket.served_since_refit >= self.refit_every
-            and any(bucket.buffers)
+            self.refit_every <= 0
+            or bucket.served_since_refit < self.refit_every
+            or not any(bucket.buffers)
         ):
-            self._refit(bucket)
+            return
+        if bucket.cooldown > 0:
+            # degraded backoff: sit this window out (buffers keep rolling,
+            # capped at refit_window) and wait a full window before the
+            # next decision
+            bucket.cooldown -= 1
+            bucket.served_since_refit = 0
+            return
+        self._refit(bucket)

@@ -1,0 +1,9 @@
+"""Shared test/benchmark instrumentation for the repro package.
+
+``repro.testing.faults`` is the deterministic fault-injection harness at
+the ``fused_column`` seam — the single library behind the fault tests,
+the serving chaos tests and ``benchmarks/serve_bench.py``'s chaos case.
+"""
+from repro.testing import faults
+
+__all__ = ["faults"]

@@ -1,0 +1,136 @@
+"""Deterministic fault injection at the ``fused_column`` seam.
+
+The contract this harness rides is the **instrumentation seam** of the
+AOT front doors (see *docs/backends.md*): ``backend.fit_padded`` /
+``backend.assign_padded`` dispatch a cached executable only while the
+module entry points ``fused_column.fit_scan_padded`` /
+``fused_column.assign_padded`` are still the jitted originals.  Replace
+either with a plain callable and the front door calls the callable
+directly — no executable is dispatched around it — so a wrapper
+installed here intercepts EVERY fused fit/assign in the process:
+sweeps, DSE, and the streaming service alike.
+
+Each injector below takes the original entry point and returns a
+wrapper that reproduces one concrete failure mode deterministically:
+
+* ``fail_on_lowering``  — a lowering-specific compile/kernel failure
+  (e.g. the Mosaic rung is down, the reference rung still works);
+* ``fail_on_threshold`` — one poisoned *design* detonates any batch it
+  rides, keyed by its threshold (distinct thresholds make a design
+  individually addressable inside a shared envelope);
+* ``fail_on_volley``    — one poisoned *request* detonates its batch,
+  keyed by its encoded volley (mid-batch crash);
+* ``nan_poison``        — the call "succeeds" but returns NaN-poisoned
+  weights (a miscompiled or numerically-broken re-fit);
+* ``slow_call``         — a stalled executable: correct results, pathologic
+  latency (trips watchdog budgets deterministically);
+* ``fail_always``       — the executable is simply down.
+
+Install a wrapper with ``monkeypatch.setattr`` in tests, or with the
+``injected(...)`` context manager outside pytest (the serve-bench chaos
+case).  All injected errors are ``InjectedFault`` (a ``RuntimeError``)
+whose message contains ``"injected fault"``.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+
+import numpy as np
+
+
+class InjectedFault(RuntimeError):
+    """An error raised by this harness — never by real code paths."""
+
+
+def fail_on_lowering(orig, lowerings=("mosaic",)):
+    """Fail whenever the call targets one of ``lowerings`` — other rungs
+    pass through, so the degradation ladder has somewhere to land."""
+
+    def wrapper(*args, **kwargs):
+        low = kwargs.get("lowering", "reference")
+        if low in lowerings:
+            raise InjectedFault(f"injected fault: lowering {low!r} down")
+        return orig(*args, **kwargs)
+
+    return wrapper
+
+
+def fail_on_threshold(orig, threshold, lowerings=None):
+    """Fail whenever the poisoned design's threshold rides the batch (at
+    one of ``lowerings``, or at any lowering when ``None``) — the
+    per-design poison for shared-envelope quarantine tests."""
+
+    def wrapper(w, xs, thresholds, *args, **kwargs):
+        low = kwargs.get("lowering", "reference")
+        if (lowerings is None or low in lowerings) and np.any(
+            np.isclose(np.asarray(thresholds), threshold)
+        ):
+            raise InjectedFault("injected fault: poisoned design present")
+        return orig(w, xs, thresholds, *args, **kwargs)
+
+    return wrapper
+
+
+def fail_on_volley(orig, volley):
+    """Fail whenever the encoded ``volley`` rides ``xs`` in any lane —
+    the per-request poison for mid-batch quarantine tests."""
+    volley = np.asarray(volley)
+
+    def wrapper(w, xs, *args, **kwargs):
+        if (np.asarray(xs) == volley).all(axis=-1).any():
+            raise InjectedFault("injected fault: poisoned volley")
+        return orig(w, xs, *args, **kwargs)
+
+    return wrapper
+
+
+def nan_poison(orig):
+    """Return the original result with one NaN planted in it — a re-fit
+    that 'succeeds' with corrupt weights (the caller's finite-weights
+    guard must catch it)."""
+
+    def wrapper(*args, **kwargs):
+        out = np.array(orig(*args, **kwargs), np.float32)
+        out.flat[0] = np.nan
+        return out
+
+    return wrapper
+
+
+def slow_call(orig, delay_s):
+    """Correct results, ``delay_s`` extra wall time — a stalled
+    executable for watchdog-budget tests."""
+
+    def wrapper(*args, **kwargs):
+        out = orig(*args, **kwargs)
+        time.sleep(delay_s)
+        return out
+
+    return wrapper
+
+
+def fail_always(orig=None, detail="executable down"):
+    """Unconditional failure (``orig`` accepted and ignored, so the same
+    callable works bare or through ``injected``)."""
+
+    def wrapper(*args, **kwargs):
+        raise InjectedFault(f"injected fault: {detail}")
+
+    return wrapper
+
+
+@contextlib.contextmanager
+def injected(name, make_wrapper, *args, module=None, **kwargs):
+    """Install ``make_wrapper(original, *args, **kwargs)`` over
+    ``fused_column.<name>`` (or ``module.<name>``) for the duration of
+    the block — the non-pytest counterpart of ``monkeypatch.setattr``,
+    used by the serve-bench chaos case."""
+    if module is None:
+        from repro.kernels import fused_column as module  # noqa: PLW0127
+    orig = getattr(module, name)
+    setattr(module, name, make_wrapper(orig, *args, **kwargs))
+    try:
+        yield orig
+    finally:
+        setattr(module, name, orig)

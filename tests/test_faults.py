@@ -19,6 +19,11 @@ The contract under test:
     `DSEResult.meta`, per-encoder values are recorded for ALL encoder
     groups, and an all-quarantined run yields an empty frontier with a
     diagnostic `best()` error, not an IndexError.
+
+All faults are injected through the shared deterministic harness
+(`repro.testing.faults`) at the `fused_column` instrumentation seam —
+the same injectors the serving tests and the serve-bench chaos case
+use, so every consumer exercises one fault model.
 """
 import json
 import os
@@ -37,6 +42,7 @@ from repro.core import backend, simulator
 from repro.core.types import ColumnConfig, STDPConfig
 from repro.distributed.straggler import StepMonitor
 from repro.kernels import fused_column
+from repro.testing import faults
 
 
 def _cfg(p, q, t_max, scale=1.0):
@@ -63,19 +69,47 @@ def _stream(n=14, length=8, classes=3, seed=0):
 
 def _poisoning_patch(monkeypatch, poison_threshold, lowerings=("reference",)):
     """Make `fit_scan_padded` raise whenever the poisoned design's
-    threshold rides the batch at one of the given lowerings."""
+    threshold rides the batch at one of the given lowerings (shared
+    harness injector)."""
     orig = fused_column.fit_scan_padded
-
-    def wrapper(w, xs, thresholds, *args, **kwargs):
-        low = kwargs.get("lowering", "reference")
-        if low in lowerings and np.any(
-            np.isclose(np.asarray(thresholds), poison_threshold)
-        ):
-            raise RuntimeError("injected fault: poisoned design present")
-        return orig(w, xs, thresholds, *args, **kwargs)
-
-    monkeypatch.setattr(fused_column, "fit_scan_padded", wrapper)
+    monkeypatch.setattr(
+        fused_column, "fit_scan_padded",
+        faults.fail_on_threshold(orig, poison_threshold, lowerings),
+    )
     return orig
+
+
+# ------------------------------------------------------- shared harness
+def test_injected_context_manager_installs_and_restores():
+    """`faults.injected` wraps a fused_column entry point for the block
+    and restores the original even when the wrapper raises."""
+    orig = fused_column.fit_scan_padded
+    with faults.injected(
+        "fit_scan_padded", faults.fail_always, detail="down"
+    ) as saved:
+        assert saved is orig
+        assert fused_column.fit_scan_padded is not orig
+        with pytest.raises(faults.InjectedFault, match="injected fault"):
+            fused_column.fit_scan_padded()
+    assert fused_column.fit_scan_padded is orig
+
+
+def test_slow_call_and_nan_poison_wrappers():
+    import time as _time
+
+    calls = []
+
+    def orig(a):
+        calls.append(a)
+        return np.ones((2, 2), np.float32)
+
+    t0 = _time.perf_counter()
+    out = faults.slow_call(orig, 0.02)(1)
+    assert _time.perf_counter() - t0 >= 0.02
+    assert np.array_equal(out, np.ones((2, 2)))
+    poisoned = faults.nan_poison(orig)(2)
+    assert np.isnan(poisoned).sum() == 1
+    assert calls == [1, 2]
 
 
 # --------------------------------------------------------- ladder policy
@@ -124,14 +158,10 @@ def test_kernel_failure_degrades_to_reference_bit_identically(monkeypatch):
     # pretend-TPU: first-choice lowering is the Mosaic kernel, which the
     # injected fault fails; the ladder must land on 'reference'
     monkeypatch.setattr(backend, "padded_lowering", lambda response: "mosaic")
-    orig = fused_column.fit_scan_padded
-
-    def mosaic_raises(*args, **kwargs):
-        if kwargs.get("lowering") == "mosaic":
-            raise RuntimeError("injected Mosaic lowering failure")
-        return orig(*args, **kwargs)
-
-    monkeypatch.setattr(fused_column, "fit_scan_padded", mosaic_raises)
+    monkeypatch.setattr(
+        fused_column, "fit_scan_padded",
+        faults.fail_on_lowering(fused_column.fit_scan_padded, ("mosaic",)),
+    )
     res = simulator.cluster_time_series_many(
         x, y, cfgs, epochs=2, seed=3, on_error="isolate"
     )
@@ -213,9 +243,7 @@ def test_cycle_rung_bit_identical_when_exact(monkeypatch):
     orig = fused_column.fit_scan_padded
     monkeypatch.setattr(
         fused_column, "fit_scan_padded",
-        lambda *a, **k: (_ for _ in ()).throw(
-            RuntimeError("injected: all fused rungs down")
-        ),
+        faults.fail_always(detail="all fused rungs down"),
     )
     res = simulator.cluster_time_series_many(
         x, y, cfgs, epochs=2, w_init=w_init, on_error="isolate"
@@ -333,7 +361,7 @@ def test_explore_all_quarantined_empty_frontier_contract(monkeypatch):
     space = dse.DesignSpace(q=(2, 3), t_max=(16,))
     monkeypatch.setattr(
         fused_column, "fit_scan_padded",
-        lambda *a, **k: (_ for _ in ()).throw(RuntimeError("injected")),
+        faults.fail_always(detail="every evaluation down"),
     )
     res = dse.explore(x, y, space, epochs=1, seed=5)
     assert res.points == [] and res.pareto == []

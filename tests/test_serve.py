@@ -13,9 +13,20 @@ Pins the serving contract stage by stage:
   contract, request by request;
 * admission failures raise structured ``RequestRejected`` (no tracing),
   and a poisoned request quarantines ALONE: batch-mates of a failing
-  batch re-run against the same executable and answer bit-identically.
+  batch re-run against the same executable and answer bit-identically;
+* overload control sheds structurally (bounded queues, deadline
+  budgets) BEFORE any JAX work, with per-reason counters in ``stats()``;
+* a failing or stalling online re-fit degrades the bucket to serving
+  from last-good weights — compile-free, request-failure-free — and the
+  bucket recovers once re-fits succeed again (faults injected through
+  the shared ``repro.testing.faults`` harness).
+
+Durability (snapshot+WAL crash recovery) is pinned separately in
+``test_serve_recovery.py``.
 """
 from __future__ import annotations
+
+import time
 
 import jax.numpy as jnp
 import numpy as np
@@ -29,7 +40,9 @@ from repro.serve import (
     RequestRejected,
     ServeFailure,
     ServeResult,
+    ServeShed,
 )
+from repro.testing import faults
 
 P, T_MAX = 12, 16
 
@@ -229,7 +242,13 @@ def test_structured_rejection_without_tracing(compile_counter):
         assert ei.value.reason == reason
         assert ei.value.detail  # human-readable, machine-checkable
     assert compile_counter.compiles == base
-    assert service.stats().rejected == len(cases)
+    stats = service.stats()
+    assert stats.rejected == len(cases)
+    # per-reason counters: one rejection each, nothing double-counted
+    assert stats.rejections == {
+        "envelope": 1, "unknown-design": 1, "shape": 1, "non-finite": 1,
+    }
+    assert stats.offered == len(cases) and stats.submitted == 0
     h = service.submit(np.random.default_rng(0).normal(size=P), "d0")
     assert isinstance(h.result(), ServeResult)
 
@@ -278,16 +297,12 @@ def test_poisoned_request_quarantines_alone(monkeypatch):
     poison = np.full(P, 2.5)
     poison_enc = np.asarray(encoding.encode(jnp.asarray(poison), cfg.t_max))
 
-    real_assign = fused_column.assign_padded
-
-    def detonator(w, xs, *args, **kwargs):
-        if (np.asarray(xs) == poison_enc).all(axis=-1).any():
-            raise FloatingPointError("poisoned volley")
-        return real_assign(w, xs, *args, **kwargs)
-
     # the instrumentation seam: backend.assign_padded honors a plain
-    # callable in place of the jitted entry point
-    monkeypatch.setattr(fused_column, "assign_padded", detonator)
+    # callable in place of the jitted entry point (shared harness)
+    monkeypatch.setattr(
+        fused_column, "assign_padded",
+        faults.fail_on_volley(fused_column.assign_padded, poison_enc),
+    )
 
     handles = [service.submit(s, "d0") for s in clean]
     handles.append(service.submit(poison, "d0"))  # fills + detonates batch
@@ -303,6 +318,167 @@ def test_poisoned_request_quarantines_alone(monkeypatch):
     stats = service.stats()
     assert stats.failed == 1 and stats.isolations == 1
     assert stats.served == 3 and stats.pending == 0
+
+
+# ------------------------------------------------------ overload control
+def test_overload_sheds_structured_with_retry_hint():
+    """Beyond ``max_pending`` queued requests, admission sheds with
+    ``reason='overloaded'`` and a retry-after hint — before any encode or
+    JAX work — and capacity frees up again after a flush."""
+    service = ClusteringService(
+        _fleet(2), batch_size=8, refit_every=0, max_pending=3
+    )
+    service.warmup()
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        service.submit(rng.normal(size=P), "d0")
+    with pytest.raises(RequestRejected) as ei:
+        service.submit(rng.normal(size=P), "d0")
+    assert ei.value.reason == "overloaded"
+    assert ei.value.retry_after_s is not None
+    service.flush()
+    h = service.submit(rng.normal(size=P), "d0")  # capacity is back
+    assert isinstance(h.result(), ServeResult)
+    stats = service.stats()
+    assert stats.rejections == {"overloaded": 1}
+    assert stats.offered == 5 and stats.submitted == 4 and stats.served == 4
+
+
+def test_deadline_budget_sheds_at_dispatch_and_admission():
+    """A request whose budget expires while queued is shed at dispatch (a
+    ``ServeShed`` outcome, no JAX work); once a batch-time estimate
+    exists, a budget below the predicted wait is rejected at admission."""
+    service = ClusteringService(_fleet(2), batch_size=4, refit_every=0)
+    service.warmup()
+    rng = np.random.default_rng(1)
+    # pre-traffic the wait estimate is 0, so admission is permissive
+    h = service.submit(rng.normal(size=P), "d0", deadline_s=0.005)
+    time.sleep(0.02)
+    service.flush()
+    shed = h.result()
+    assert isinstance(shed, ServeShed)
+    assert shed.reason == "deadline" and shed.waited_s >= 0.005
+    # serve real traffic to establish the batch-time EWMA
+    for _ in range(4):
+        service.submit(rng.normal(size=P), "d0")
+    assert service._batch_ewma is not None
+    with pytest.raises(RequestRejected) as ei:
+        service.submit(rng.normal(size=P), "d0", deadline_s=1e-12)
+    assert ei.value.reason == "deadline"
+    assert ei.value.retry_after_s > 0
+    stats = service.stats()
+    assert stats.shed == 1 and stats.rejections == {"deadline": 1}
+    assert stats.served == 4 and not stats.failed
+
+
+def test_drain_serves_inflight_then_stops_admission():
+    service = ClusteringService(_fleet(2), batch_size=4, refit_every=0)
+    service.warmup()
+    rng = np.random.default_rng(2)
+    handles = [service.submit(rng.normal(size=P), "d0") for _ in range(2)]
+    assert not any(h.done for h in handles)  # queued behind a partial batch
+    service.drain()
+    assert all(isinstance(h.result(), ServeResult) for h in handles)
+    with pytest.raises(RequestRejected) as ei:
+        service.submit(rng.normal(size=P), "d0")
+    assert ei.value.reason == "draining"
+    stats = service.stats()
+    assert stats.served == 2 and stats.pending == 0
+    assert stats.rejections == {"draining": 1}
+
+
+# ------------------------------------------------------- degraded re-fit
+def test_refit_outage_degrades_to_last_good_compile_free(
+    compile_counter, monkeypatch
+):
+    """The acceptance bar for degraded mode: with the re-fit path down
+    hard, the service keeps answering from last-good weights — zero
+    request failures, zero XLA compiles — and recovers (weights learning
+    again) once the fault lifts."""
+    service = ClusteringService(
+        _fleet(2), batch_size=4, refit_every=4, refit_window=4, seed=0
+    )
+    service.warmup()
+    w0 = {d: service.weights(d) for d in service.designs()}
+    base = compile_counter.compiles
+    rng = np.random.default_rng(3)
+    with monkeypatch.context() as m:
+        m.setattr(
+            fused_column, "fit_scan_padded",
+            faults.fail_always(detail="refit executable down"),
+        )
+        for _ in range(12):  # 3 re-fit windows under the outage
+            service.submit(rng.normal(size=P), "d0")
+            service.submit(rng.normal(size=P), "d1")
+        service.flush()
+    mid = service.stats()
+    assert mid.served == 24 and not mid.failed  # every request answered
+    assert mid.degraded == 1 and mid.refit_failures >= 1
+    assert mid.refits == 0 and mid.recoveries == 0
+    assert compile_counter.compiles == base  # no compile under the outage
+    for d in service.designs():
+        assert np.array_equal(service.weights(d), w0[d])  # last-good held
+
+    # fault lifted: the backoff cooldown expires, a window commits, the
+    # bucket recovers, and the weights move again
+    for _ in range(16):
+        service.submit(rng.normal(size=P), "d0")
+        service.submit(rng.normal(size=P), "d1")
+    service.flush()
+    stats = service.stats()
+    assert stats.recoveries == 1 and stats.degraded == 0
+    assert stats.refits >= 1 and not stats.failed
+    assert any(
+        not np.array_equal(service.weights(d), w0[d])
+        for d in service.designs()
+    )
+    assert compile_counter.compiles == base  # recovery reused executables
+
+
+def test_nan_poisoned_refit_is_never_committed(monkeypatch):
+    """A re-fit that 'succeeds' with NaN weights is rejected by the
+    finite-weights guard — the live weights stay finite and last-good."""
+    service = ClusteringService(
+        _fleet(1), batch_size=4, refit_every=4, refit_window=4, seed=1
+    )
+    service.warmup()
+    w0 = service.weights("d0")
+    rng = np.random.default_rng(4)
+    with monkeypatch.context() as m:
+        m.setattr(
+            fused_column, "fit_scan_padded",
+            faults.nan_poison(fused_column.fit_scan_padded),
+        )
+        for s in _stream(rng, 4):
+            service.submit(s, "d0")
+    stats = service.stats()
+    assert stats.refit_failures == 1 and stats.degraded == 1
+    assert stats.refits == 0 and not stats.failed
+    assert np.array_equal(service.weights("d0"), w0)
+    assert np.isfinite(service.weights("d0")).all()
+
+
+def test_refit_watchdog_discards_stalled_attempt(monkeypatch):
+    """An attempt exceeding ``refit_budget_s`` is discarded as a stall
+    (its result thrown away) even though it returned fine weights."""
+    service = ClusteringService(
+        _fleet(1), batch_size=4, refit_every=4, refit_window=4, seed=2,
+        refit_budget_s=0.01,
+    )
+    service.warmup()
+    w0 = service.weights("d0")
+    rng = np.random.default_rng(5)
+    with monkeypatch.context() as m:
+        m.setattr(
+            fused_column, "fit_scan_padded",
+            faults.slow_call(fused_column.fit_scan_padded, 0.05),
+        )
+        for s in _stream(rng, 4):
+            service.submit(s, "d0")
+    stats = service.stats()
+    assert stats.refit_stalls >= 1 and stats.refit_failures == 1
+    assert stats.degraded == 1 and not stats.failed
+    assert np.array_equal(service.weights("d0"), w0)
 
 
 # ------------------------------------------------- seams used by serving

@@ -1,0 +1,263 @@
+"""Durable serving: snapshot+WAL crash recovery (ISSUE 9 acceptance).
+
+The contract under test (``repro.serve.durability`` +
+``ClusteringService.recover``):
+
+* live weights mutate only at committed re-fits, each committed re-fit's
+  exact input window is WAL-logged (fsync'd) after the in-memory commit,
+  and snapshots publish atomically BEFORE the WAL truncates — so at
+  every instant (latest snapshot) + (WAL tail) reproduces the live
+  weights **bit-identical**, losing at most the re-fit in flight;
+* ``recover(dir)`` rebuilds the fleet from ``meta.json``, restores the
+  newest snapshot, replays the WAL tail through the same ladder/commit
+  path, and refuses a directory whose fingerprint does not match the
+  reconstructed service;
+* the WAL reader tolerates a torn trailing line (the DSE journal's
+  defensive-read rule); snapshot retention stays bounded via pruning;
+* the SIGKILL test drives a REAL process to death mid-serve (mirroring
+  ``test_faults.py``'s DSE kill-and-resume test) and proves the
+  recovered service matches an uninterrupted reference bit-for-bit —
+  weights AND subsequent assignments.
+"""
+from __future__ import annotations
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import simulator
+from repro.core.types import ColumnConfig
+from repro.serve import ClusteringService, RequestRejected, durability
+from repro.serve.durability import DurableStore, VolleyWAL
+
+P, T_MAX = 12, 16
+
+
+def _cfg(q=4, t_max=T_MAX) -> ColumnConfig:
+    c = ColumnConfig(p=P, q=q, t_max=t_max)
+    return c.with_threshold(simulator.suggest_threshold(c))
+
+
+def _fleet(n=2) -> dict:
+    return {f"d{i}": _cfg(q=3 + (i % 2)) for i in range(n)}
+
+
+def _drive(service, rng, n, names=None):
+    names = names or list(service.designs())
+    for k in range(n):
+        service.submit(rng.normal(size=P), names[k % len(names)])
+    service.flush()
+
+
+# ------------------------------------------------------------------ WAL
+def test_wal_header_append_and_torn_tail(tmp_path):
+    wal = VolleyWAL(str(tmp_path / "wal.jsonl"))
+    wal.create("fp16")
+    wal.append({"kind": "refit", "seq": 1, "bucket": 0, "xs": [[1, 2]]})
+    wal.append({"kind": "refit", "seq": 2, "bucket": 0, "xs": [[3, 4]]})
+    assert [r["seq"] for r in wal.validate("fp16")] == [1, 2]
+    # torn trailing line (killed mid-append): skipped, never fatal
+    with open(wal.path, "a") as f:
+        f.write('{"kind": "refit", "seq": 3, "xs": [[5')
+    assert [r["seq"] for r in wal.validate("fp16")] == [1, 2]
+    with pytest.raises(ValueError, match="fingerprint"):
+        wal.validate("other")
+
+
+def test_wal_truncate_through_keeps_newer_tail(tmp_path):
+    wal = VolleyWAL(str(tmp_path / "wal.jsonl"))
+    wal.create("fp")
+    for seq in (1, 2, 3):
+        wal.append({"kind": "refit", "seq": seq, "bucket": 0, "xs": []})
+    wal.truncate_through(2, "fp")
+    assert [r["seq"] for r in wal.validate("fp")] == [3]
+    # header survives the rewrite
+    assert wal.load()[0]["kind"] == "meta"
+    with pytest.raises(ValueError, match="header"):
+        VolleyWAL(str(tmp_path / "missing.jsonl")).validate("fp")
+
+
+def test_durable_store_refuses_reuse_and_validates(tmp_path):
+    service = ClusteringService(
+        _fleet(), batch_size=4, refit_every=0,
+        durable_dir=str(tmp_path / "svc"),
+    )
+    assert service.stats().snapshots == 0  # the seq-0 snapshot is create's
+    with pytest.raises(ValueError, match="recover"):
+        ClusteringService(
+            _fleet(), batch_size=4, refit_every=0,
+            durable_dir=str(tmp_path / "svc"),
+        )
+    store = DurableStore(str(tmp_path / "svc"))
+    assert store.exists() and store.ckpt.latest_step() == 0
+    with pytest.raises(ValueError, match="fingerprint"):
+        store.attach("0000000000000000")
+    with pytest.raises(FileNotFoundError, match="no durable service"):
+        DurableStore(str(tmp_path / "empty")).load_meta()
+
+
+# ------------------------------------------------------------- recovery
+def test_recover_mid_wal_is_bit_identical_and_keeps_serving(tmp_path):
+    """Snapshot at seq 8 + a 2-record WAL tail: recovery replays the tail
+    and matches the live service bit-for-bit — weights and the next
+    batch's assignments."""
+    live = ClusteringService(
+        _fleet(), batch_size=4, refit_every=4, refit_window=4, seed=7,
+        durable_dir=str(tmp_path / "svc"), snapshot_every=4,
+    )
+    live.warmup()
+    rng = np.random.default_rng(1)
+    _drive(live, rng, 40)  # 10 re-fits: snapshot at 8, WAL tail {9, 10}
+    st = live.stats()
+    assert st.refits == 10 and st.snapshots == 2 and st.wal_records == 2
+
+    rec = ClusteringService.recover(str(tmp_path / "svc"))
+    assert rec.stats().replayed == 2
+    for d in live.designs():
+        np.testing.assert_array_equal(live.weights(d), rec.weights(d))
+
+    rec.warmup()
+    names = list(live.designs())
+    xs = [rng.normal(size=P) for _ in range(8)]
+    a = [live.submit(x, names[i % 2]).result().cluster
+         for i, x in enumerate(xs)]
+    b = [rec.submit(x, names[i % 2]).result().cluster
+         for i, x in enumerate(xs)]
+    assert a == b
+
+
+def test_recover_refuses_mismatched_fleet(tmp_path):
+    ClusteringService(
+        _fleet(), batch_size=4, refit_every=0,
+        durable_dir=str(tmp_path / "svc"),
+    )
+    meta_path = tmp_path / "svc" / durability.META_FILE
+    meta = json.loads(meta_path.read_text())
+    # tamper: the recorded fleet no longer matches the fingerprint
+    meta["spec"]["seed"] = 999
+    meta_path.write_text(json.dumps(meta))
+    with pytest.raises(ValueError, match="fingerprint"):
+        ClusteringService.recover(str(tmp_path / "svc"))
+
+
+def test_snapshot_retention_stays_bounded(tmp_path):
+    service = ClusteringService(
+        _fleet(1), batch_size=4, refit_every=4, refit_window=4,
+        durable_dir=str(tmp_path / "svc"), snapshot_every=1, seed=0,
+    )
+    service.warmup()
+    rng = np.random.default_rng(2)
+    _drive(service, rng, 24)  # 6 re-fits, one snapshot each
+    assert service.stats().snapshots == 6
+    store = DurableStore(str(tmp_path / "svc"))
+    steps = store.ckpt.steps()
+    assert len(steps) <= durability.SNAPSHOTS_KEPT
+    assert steps[-1] == store.ckpt.latest_step() == 6
+
+
+def test_drain_publishes_final_snapshot(tmp_path):
+    service = ClusteringService(
+        _fleet(), batch_size=4, refit_every=4, refit_window=4, seed=3,
+        durable_dir=str(tmp_path / "svc"), snapshot_every=4,
+    )
+    service.warmup()
+    rng = np.random.default_rng(3)
+    _drive(service, rng, 12)  # 3 re-fits: WAL tail is non-empty
+    assert service.stats().wal_records == 3
+    final = service.drain()
+    assert final.wal_records == 0  # the drain snapshot covered the tail
+    with pytest.raises(RequestRejected, match="draining"):
+        service.submit(rng.normal(size=P), "d0")
+    rec = ClusteringService.recover(str(tmp_path / "svc"))
+    assert rec.stats().replayed == 0  # nothing left to replay
+    for d in service.designs():
+        np.testing.assert_array_equal(service.weights(d), rec.weights(d))
+
+
+# ------------------------------------------------------ SIGKILL the serve
+def test_serve_sigkill_recover_reproduces_weights_and_answers(tmp_path):
+    """Acceptance: a durable service SIGKILLed mid-serve (a real process,
+    right after a WAL append — mirroring the DSE kill-and-resume test)
+    recovers to weights bit-identical to an uninterrupted reference run,
+    and answers the next requests identically too."""
+    dd = tmp_path / "svc"
+    code = textwrap.dedent(f"""
+        import os, signal
+        import numpy as np
+        from repro.core import simulator
+        from repro.core.types import ColumnConfig
+        from repro.serve import ClusteringService, durability
+
+        def cfg(q):
+            c = ColumnConfig(p={P}, q=q, t_max={T_MAX})
+            return c.with_threshold(simulator.suggest_threshold(c))
+
+        fleet = {{"d0": cfg(3), "d1": cfg(4)}}
+        orig_append = durability.VolleyWAL.append
+        count = [0]
+
+        def killing_append(self, record):
+            orig_append(self, record)  # the record IS durable
+            count[0] += 1
+            if count[0] == 3:
+                os.kill(os.getpid(), signal.SIGKILL)  # die mid-serve
+
+        durability.VolleyWAL.append = killing_append
+        service = ClusteringService(
+            fleet, batch_size=4, refit_every=4, refit_window=4, seed=7,
+            durable_dir={str(dd)!r}, snapshot_every=2,
+        )
+        service.warmup()
+        rng = np.random.default_rng(21)
+        names = list(fleet)
+        for k in range(64):
+            service.submit(rng.normal(size={P}), names[k % 2])
+        service.flush()
+        raise SystemExit("unreachable: the third WAL append must kill us")
+    """)
+    r = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=dict(os.environ, PYTHONPATH="src"),
+        timeout=600,
+    )
+    assert r.returncode == -signal.SIGKILL, (r.returncode, r.stderr[-2000:])
+
+    # the kill landed after commit #3's append: snapshot at seq 2, WAL
+    # tail {3} — recovery must replay exactly one record
+    rec = ClusteringService.recover(str(dd))
+    assert rec.stats().replayed == 1
+
+    # uninterrupted reference: same fleet/seed/stream through the same 3
+    # committed re-fits (12 requests at refit_every=4, batch 4)
+    ref = ClusteringService(
+        {"d0": _cfg(q=3), "d1": _cfg(q=4)}, batch_size=4, refit_every=4,
+        refit_window=4, seed=7,
+    )
+    ref.warmup()
+    rng = np.random.default_rng(21)
+    names = list(ref.designs())
+    for k in range(12):
+        ref.submit(rng.normal(size=P), names[k % 2])
+    ref.flush()
+    assert ref.stats().refits == 3
+    for d in names:
+        np.testing.assert_array_equal(
+            ref.weights(d), rec.weights(d),
+            err_msg=f"{d}: recovered weights differ from uninterrupted run",
+        )
+
+    # and the NEXT batch answers identically on both services
+    rec.warmup()
+    xs = [rng.normal(size=P) for _ in range(8)]
+    a = [ref.submit(x, names[i % 2]).result().cluster
+         for i, x in enumerate(xs)]
+    b = [rec.submit(x, names[i % 2]).result().cluster
+         for i, x in enumerate(xs)]
+    assert a == b

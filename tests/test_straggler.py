@@ -94,6 +94,20 @@ def test_stop_without_start_is_a_no_op():
     assert len(m.times) == 0 and not m.events
 
 
+def test_stage_labels_attributed_to_events():
+    """start(label=...) tags the flagged event with its pipeline stage so
+    a multi-stage consumer (the streaming service's 'assign'/'refit') can
+    attribute a stall; unlabeled steps keep the empty default."""
+    m = StepMonitor(threshold=0.0, warmup=1)
+    m.observe(0, 1.0)  # warm the window
+    ev = m.observe(1, 1.0, label="refit")
+    assert ev is not None and ev.label == "refit"
+    m.start("assign")
+    ev2 = m.stop()
+    assert ev2 is not None and ev2.label == "assign"
+    assert m.observe(3, 1.0).label == ""  # default stays positional-safe
+
+
 def test_start_stop_wall_clock_path():
     m = StepMonitor(warmup=1)
     m.start()
