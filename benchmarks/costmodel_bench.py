@@ -1,0 +1,121 @@
+"""Cost-model smoke bench — predict-vs-measure error report (ISSUE 10).
+
+Calibrates (or loads) the host's ``costmodel.DeviceProfile``, then for a
+small grid of padded-fit envelopes asks the cost model for its
+``ExecutionPlan`` and predicted warm step time, measures the real warm
+step time through the production entry point (``backend.fit_padded``),
+and prints the prediction error per case.  The point is NOT tight error —
+the prediction only has to rank candidate blockings correctly — but the
+ratio drifting far from its recorded band is the earliest sign the model
+or the probes rotted.  Registered in ``benchmarks.run`` so ``--check``
+fails on import rot like every other table.
+
+Emits ``costmodel/<case>,measured_us_per_volley,pred=...`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import backend
+from repro.core.types import TIME_DTYPE
+from repro.roofline import costmodel
+
+# (name, d, p, q, t_window, volleys, epochs) — the tracked sweep geometry
+# plus a skinny and a wide neighbor, so the report covers the envelope
+# range the simulator front-end actually produces
+CASES = [
+    ("fit4x96x10t64", 4, 96, 10, 64, 64, 4),
+    ("fit2x64x8t64", 2, 64, 8, 64, 64, 2),
+    ("fit8x128x5t32", 8, 128, 5, 32, 64, 2),
+]
+
+
+def _measure_case(name, d, p, q, t_window, n_volleys, epochs) -> dict:
+    rng = np.random.default_rng(0)
+    w0 = np.asarray(rng.integers(0, 8, (d, p, q)), np.float32)
+    xs = jnp.asarray(
+        rng.integers(0, t_window, (n_volleys, d, p)), TIME_DTYPE
+    )
+    thresholds = jnp.full((d,), p * 7 / 8.0, jnp.float32)
+    t_maxes = jnp.full((d,), t_window, TIME_DTYPE)
+    q_actives = jnp.full((d,), q, TIME_DTYPE)
+    lowering = backend.padded_lowering("rnl")
+    plan = backend.execution_plan(
+        "fit", lowering, d, p, q, t_window, n_volleys, epochs,
+    )
+
+    def fit():
+        # fresh device copy each call: fit_padded donates its weight operand
+        jax.block_until_ready(backend.fit_padded(
+            jnp.asarray(w0), xs, thresholds, t_maxes, q_actives,
+            t_window=t_window, w_max=7, wta_k=1,
+            mu_capture=0.5, mu_backoff=-0.5, mu_search=0.1,
+            stabilize=True, response="rnl",
+            epochs=epochs, lowering=lowering,
+        ))
+
+    us = time_call(fit)
+    meas_step_us = us / (epochs * n_volleys)
+    pred_step_us = plan.predicted_step_s * 1e6
+    return {
+        "case": name,
+        "lowering": lowering,
+        "plan": plan.meta(),
+        "measured_us_per_volley": meas_step_us,
+        "predicted_us_per_volley": pred_step_us,
+        "predicted_measured_ratio": (
+            pred_step_us / meas_step_us if meas_step_us else float("nan")
+        ),
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--force", action="store_true",
+        help="re-probe the device even if a calibration is already saved",
+    )
+    args = ap.parse_args(argv)
+    try:
+        prof = (
+            costmodel.calibrate(force=True) if args.force
+            else costmodel.load_or_calibrate()
+        )
+        print(
+            f"profile: {prof.name} (calibrated={prof.calibrated}, "
+            f"peak={prof.peak_flops:.3g} FLOP/s, bw={prof.hbm_bw:.3g} B/s, "
+            f"dispatch={prof.dispatch_s * 1e6:.1f} us, "
+            f"fused_eff={prof.fused_eff:.2f})"
+        )
+    except Exception as e:
+        print(f"calibration unavailable ({e!r}); constants fallback")
+
+    rows = [_measure_case(*case) for case in CASES]
+    print("\n# Cost model: predicted vs measured warm step time")
+    print("| case | lowering | plan (v,t,shards) | predicted us/volley | "
+          "measured us/volley | pred/meas |")
+    print("|---|---|---|---|---|---|")
+    for r in rows:
+        pl = r["plan"]
+        print(
+            f"| {r['case']} | {r['lowering']} | "
+            f"({pl['v_blk']},{pl['t_blk']},{pl['shards']}) | "
+            f"{r['predicted_us_per_volley']:.1f} | "
+            f"{r['measured_us_per_volley']:.1f} | "
+            f"{r['predicted_measured_ratio']:.2f} |"
+        )
+    for r in rows:
+        emit(
+            f"costmodel/{r['case']}", r["measured_us_per_volley"],
+            f"pred/meas={r['predicted_measured_ratio']:.2f} "
+            f"source={r['plan']['source']}",
+        )
+
+
+if __name__ == "__main__":
+    main()

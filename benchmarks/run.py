@@ -15,6 +15,7 @@ Emits ``name,us_per_call,derived`` CSV rows (plus human tables) for:
   dse      — fault-isolation + journal overhead of the design sweep
   serve    — streaming clustering service req/s + latency (BENCH_serve.json)
   roofline — §Roofline report from dry-run artifacts (if present)
+  costmodel — device-calibrated cost model: predicted vs measured step time
 
 ``--check`` imports every registered benchmark and exits nonzero if any
 fails to import, so the reproduction commands documented in README.md
@@ -39,6 +40,7 @@ MODULES = {
     "dse": "benchmarks.dse_bench",
     "serve": "benchmarks.serve_bench",
     "roofline": "benchmarks.roofline",
+    "costmodel": "benchmarks.costmodel_bench",
 }
 
 

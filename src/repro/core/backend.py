@@ -87,6 +87,12 @@ def padded_lowering(response: str) -> str:
     this is a lowering choice, not a semantic switch).  The interpreter is
     never chosen here — validation passes ``lowering='interpret'``
     explicitly.
+
+    This is the ``lowering`` input of every :func:`execution_plan` — the
+    plan RECORDS the lowering it was chosen for (plan metadata surfaces
+    it in bench rows / serve stats), it never overrides it: which algebra
+    body runs is a correctness-scoped decision, which blocking it runs
+    under is the cost model's.
     """
     low = pallas_lowering()
     if response in fused_column.fire_responses(low):
@@ -97,11 +103,19 @@ def padded_lowering(response: str) -> str:
 def volley_block(
     lowering: str, n_volleys: int, d: Optional[int] = None
 ) -> int:
-    """Default volley-block size for the blocked fused scans.
+    """Hand-tuned fallback volley-block size for the blocked fused scans.
+
+    Since the cost model landed this is the CONSTANTS HALF of the block
+    policy: :func:`execution_plan` consults the device-calibrated cost
+    model (``roofline.costmodel``) when a calibration is active and falls
+    back to exactly these numbers when none is — un-calibrated hosts (and
+    every existing test pin) behave as before.  Prefer
+    ``execution_plan(...).v_blk`` in new code; call this directly only to
+    name the constants themselves (the bench head-to-heads do).
 
     The padded training scan (``fused_column.fit_scan_padded``) advances
     ``v_blk`` volleys per outer scan step; this is the ONE place the
-    default block size is decided.  Kernel lowerings fold the block inside
+    fallback block size is decided.  Kernel lowerings fold the block inside
     a single kernel invocation (an in-kernel ``fori_loop`` with the weight
     buffer VMEM-resident), so a larger block amortizes kernel launches and
     HBM weight round-trips at no code-size cost.  The reference lowering
@@ -128,6 +142,84 @@ def volley_block(
         # keeps every PR 4/5 warm number intact.
         base = min(base, max(2, 2 * int(d)))
     return max(1, min(base, int(n_volleys)))
+
+
+# Lane-aligned kernel time-block fallback (the old hard-coded keyword
+# default of every padded entry point; still the constants-policy choice).
+DEFAULT_T_BLK = 128
+
+
+def execution_plan(
+    kind: str,
+    lowering: str,
+    d: int,
+    p_pad: int,
+    q_pad: int,
+    t_window: int,
+    n_volleys: int,
+    epochs: int = 1,
+    *,
+    w_max: Optional[int] = None,
+    response: str = "rnl",
+):
+    """The ONE policy front door: an ``ExecutionPlan`` for a padded scan.
+
+    Every knob the fused paths used to pick from scattered constants —
+    ``volley_block``'s 8/32, the ``t_blk=128`` default, the envelope
+    waste cap, the shard count — now routes through here.  With a device
+    calibration active (``roofline.costmodel.load_or_calibrate()``; the
+    benches and launchers opt in, libraries and tests never do
+    implicitly) the plan minimizes roofline-predicted step time subject
+    to the profile's footprint bound; without one it packages the
+    hand-tuned constants verbatim (``plan.source == 'constants'``), so
+    un-calibrated behavior is bit-for-bit the pre-costmodel policy.
+
+    Deterministic for fixed inputs and memoized per profile, so a warmed
+    executable key (``warm_fit_padded``) and a traffic-time key
+    (``fit_padded``) resolve the SAME blocking by construction — the
+    zero-compile-after-warmup guarantee survives the policy swap.  Plans
+    change blocking/sharding only, never semantics: every candidate is
+    bit-identical (the ``v_blk``/``t_blk``/shard contracts in
+    ``docs/kernels.md``), so a mis-calibrated model can cost time, not
+    correctness.  See ``docs/costmodel.md``.
+    """
+    from repro.roofline import costmodel
+
+    return costmodel.choose_plan(
+        kind, lowering, int(d), int(p_pad), int(q_pad), int(t_window),
+        int(n_volleys), int(epochs),
+        w_max=int(w_max) if w_max is not None else 7,
+        response=response,
+    )
+
+
+def _plan_blocks(
+    kind: str,
+    lowering: str,
+    d: int,
+    p_pad: int,
+    q_pad: int,
+    t_window: int,
+    n_volleys: int,
+    epochs: int,
+    w_max: Optional[int],
+    response: str,
+    v_blk: Optional[int],
+    t_blk: Optional[int],
+) -> tuple[int, int]:
+    """Resolve the (v_blk, t_blk) a padded entry point should run under:
+    caller-pinned values win untouched; unset knobs come from the plan
+    (cost model when calibrated, the documented constants otherwise)."""
+    if v_blk is not None and t_blk is not None:
+        return int(v_blk), int(t_blk)
+    plan = execution_plan(
+        kind, lowering, d, p_pad, q_pad, t_window, n_volleys, epochs,
+        w_max=w_max, response=response,
+    )
+    return (
+        int(v_blk) if v_blk is not None else plan.v_blk,
+        int(t_blk) if t_blk is not None else plan.t_blk,
+    )
 
 
 def assign_lowering(response: str, w) -> str:
@@ -259,6 +351,8 @@ def envelope_buckets(
     shapes: Sequence[tuple[int, int, int]],
     waste_cap: Optional[float] = None,
     max_bucket: Optional[int] = None,
+    n_volleys: Optional[int] = None,
+    epochs: int = 1,
 ) -> list[tuple[tuple[int, int, int], list[int]]]:
     """Pack (p, q, t_max) design shapes into shared padding envelopes.
 
@@ -266,8 +360,14 @@ def envelope_buckets(
     envelope is the elementwise max of its members' shapes, subject to two
     caps:
 
-    * ``waste_cap`` (None -> ``ENVELOPE_WASTE_CAP``): the envelope volume
-      must stay within this factor of every member's true volume —
+    * ``waste_cap`` (None -> plan policy): with a device calibration
+      active AND a stream length hint (``n_volleys``/``epochs``), the cap
+      comes from the cost model's compile-vs-recurring-waste break-even
+      (``costmodel.choose_waste_cap`` — padding waste recurs every
+      volley, sharing an envelope saves one compile, so short streams
+      tolerate more waste than long ones); otherwise the hand-tuned
+      ``ENVELOPE_WASTE_CAP`` constant.  Either way the cap bounds how far
+      padding may inflate any member's per-volley fire volume —
       size-compatible designs share one compiled scan, badly mismatched
       ones get their own envelope (and their own, cheap, compilation).
     * ``max_bucket`` (None -> unbounded): upper bound on designs per
@@ -285,6 +385,16 @@ def envelope_buckets(
     """
     if waste_cap is None:
         waste_cap = ENVELOPE_WASTE_CAP
+        if n_volleys is not None and shapes:
+            from repro.roofline import costmodel
+
+            pm = max(p for (p, _, _) in shapes)
+            qm = max(q for (_, q, _) in shapes)
+            tm = max(t for (_, _, t) in shapes)
+            waste_cap = costmodel.choose_waste_cap(
+                None, len(shapes), pm, qm, tm,
+                n_volleys=int(n_volleys), epochs=int(epochs),
+            )
     vols = [p * q * t for (p, q, t) in shapes]
     order = sorted(range(len(shapes)), key=lambda i: -vols[i])
     buckets: list[tuple[tuple[int, int, int], list[int]]] = []
@@ -308,15 +418,26 @@ def envelope_buckets(
 DESIGN_AXIS = "design"
 
 
-def design_shards(d: int) -> int:
+def design_shards(d: int, volume: Optional[float] = None) -> int:
     """Shard count policy for a design axis of length ``d``.
 
-    The largest divisor of ``d`` that fits the local device count — the
-    design axis of a padded sweep is embarrassingly parallel (every
-    design's fire/WTA/STDP is independent), so it shards with no
-    collectives at all.  1 on a single-device host or when nothing
-    divides: the single-device fallback is simply "no sharding".
+    Default policy: the largest divisor of ``d`` that fits the local
+    device count — the design axis of a padded sweep is embarrassingly
+    parallel (every design's fire/WTA/STDP is independent), so it shards
+    with no collectives at all.  1 on a single-device host or when
+    nothing divides: the single-device fallback is simply "no sharding".
+
+    With a per-design fire ``volume`` hint (``p * q * t``) AND an active
+    device calibration, the cost model picks the shard count instead
+    (``costmodel.choose_shards``): shard only while the compute saved per
+    volley exceeds the added per-device dispatch, so a microsecond-sized
+    bucket stops paying k launches to split sub-dispatch work.  Sharding
+    is a throughput knob only — results are bit-identical for any count.
     """
+    if volume is not None:
+        from repro.roofline import costmodel
+
+        return costmodel.choose_shards(int(d), float(volume))
     n_dev = jax.local_device_count()
     k = min(int(d), n_dev)
     while k > 1 and d % k:
@@ -324,12 +445,17 @@ def design_shards(d: int) -> int:
     return max(k, 1)
 
 
-def design_mesh(d: int):
+def design_mesh(
+    d: int, volume: Optional[float] = None, shards: Optional[int] = None
+):
     """1-D device mesh over ``DESIGN_AXIS`` for a design axis of length
     ``d``, or None on a single device / when ``d`` has no usable divisor
     (the clean single-device fallback — callers treat None as 'leave the
-    arrays where they are')."""
-    k = design_shards(d)
+    arrays where they are').  ``volume`` is the optional per-design fire
+    volume hint forwarded to the ``design_shards`` plan policy; callers
+    that already hold an ``ExecutionPlan`` pass its ``shards`` count
+    directly so the mesh and the recorded plan can never disagree."""
+    k = shards if shards is not None else design_shards(d, volume)
     if k <= 1:
         return None
     return jax.make_mesh((k,), (DESIGN_AXIS,))
@@ -552,7 +678,7 @@ def warm_fit_padded(
     response: str,
     epochs: int,
     lowering: str,
-    t_blk: int = 128,
+    t_blk: Optional[int] = None,
     v_blk: Optional[int] = None,
 ) -> bool:
     """Make one envelope's fit executable resident *before* traffic.
@@ -561,16 +687,21 @@ def warm_fit_padded(
     their envelopes up front; warming moves the one-time trace/compile —
     or the millisecond disk deserialize under ``compile_cache`` — out of
     the first request's latency.  No operands are needed and nothing is
-    donated.  Returns True when the executable was already resident
-    in-process (a later ``fit_padded`` with the same shapes+statics is
-    then dispatch-only).  When the module entry point has been replaced
-    by a plain callable (the fault-injection seam — see ``fit_padded``)
-    there is nothing to compile and this is a no-op returning False.
+    donated.  Unset ``v_blk``/``t_blk`` resolve through
+    ``execution_plan`` — the same deterministic resolution ``fit_padded``
+    performs, so a warmed key and a traffic key always coincide.  Returns
+    True when the executable was already resident in-process (a later
+    ``fit_padded`` with the same shapes+statics is then dispatch-only).
+    When the module entry point has been replaced by a plain callable
+    (the fault-injection seam — see ``fit_padded``) there is nothing to
+    compile and this is a no-op returning False.
     """
     if not hasattr(fused_column.fit_scan_padded, "lower"):
         return False
-    if v_blk is None:
-        v_blk = volley_block(lowering, n_volleys, d=d)
+    v_blk, t_blk = _plan_blocks(
+        "fit", lowering, d, p_pad, q_pad, t_window, n_volleys, epochs,
+        w_max, response, v_blk, t_blk,
+    )
     key = _fit_key(
         (d, p_pad, q_pad), (n_volleys, d, p_pad), t_window, w_max, wta_k,
         stabilize, response, epochs, lowering, t_blk, v_blk,
@@ -598,15 +729,17 @@ def warm_assign_padded(
     wta_k: int,
     response: str,
     lowering: str,
-    t_blk: int = 128,
+    t_blk: Optional[int] = None,
     v_blk: Optional[int] = None,
     w_max: Optional[int] = None,
 ) -> bool:
     """Assignment twin of ``warm_fit_padded`` (same contract)."""
     if not hasattr(fused_column.assign_padded, "lower"):
         return False
-    if v_blk is None:
-        v_blk = volley_block(lowering, n_volleys)
+    v_blk, t_blk = _plan_blocks(
+        "assign", lowering, d, p_pad, q_pad, t_window, n_volleys, 1,
+        w_max, response, v_blk, t_blk,
+    )
     key = _assign_key(
         (d, p_pad, q_pad), (n_volleys, d, p_pad), t_window, wta_k, response,
         lowering, t_blk, v_blk, w_max,
@@ -651,7 +784,7 @@ def fit_padded(
     response: str,
     epochs: int,
     lowering: str,
-    t_blk: int = 128,
+    t_blk: Optional[int] = None,
     v_blk: Optional[int] = None,
 ):
     """Envelope-cached AOT front door to ``fused_column.fit_scan_padded``.
@@ -665,6 +798,11 @@ def fit_padded(
     executable while their results stay their own.  Like the underlying
     scan, the weight buffer ``w`` is donated: pass a fresh array.
 
+    Unset ``v_blk``/``t_blk`` resolve through ``execution_plan`` (cost
+    model when a calibration is active, the documented constants
+    otherwise) BEFORE the cache key is formed, so plan choices and AOT
+    keys can never disagree between warmup and traffic.
+
     Callers with sharded operands must use ``fit_scan_padded`` directly —
     these executables are compiled against unsharded specs, while the jit
     path lets GSPMD propagate the design partitioning at trace time.
@@ -675,8 +813,10 @@ def fit_padded(
     t_maxes = _coerce(t_maxes, TIME_DTYPE)
     q_actives = _coerce(q_actives, TIME_DTYPE)
     d, p_pad, q_pad = w.shape
-    if v_blk is None:
-        v_blk = volley_block(lowering, xs.shape[0], d=d)
+    v_blk, t_blk = _plan_blocks(
+        "fit", lowering, d, p_pad, q_pad, t_window, xs.shape[0], epochs,
+        w_max, response, v_blk, t_blk,
+    )
     if not hasattr(fused_column.fit_scan_padded, "lower"):
         # the module entry point has been replaced by a plain callable —
         # the fault-injection / instrumentation seam the fault tests (and
@@ -724,23 +864,25 @@ def assign_padded(
     wta_k: int,
     response: str,
     lowering: str,
-    t_blk: int = 128,
+    t_blk: Optional[int] = None,
     v_blk: Optional[int] = None,
     w_max: Optional[int] = None,
 ):
     """Envelope-cached AOT front door to ``fused_column.assign_padded``.
 
     Same contract as ``fit_padded`` (envelope-keyed executable, runtime
-    operands, bit-identical to the jit path) for the batched assignment
-    pass; nothing is donated.
+    operands, plan-resolved blocking, bit-identical to the jit path) for
+    the batched assignment pass; nothing is donated.
     """
     w = _coerce(w, jnp.float32)
     xs = _coerce(xs, TIME_DTYPE)
     thresholds = _coerce(thresholds, jnp.float32)
     t_maxes = _coerce(t_maxes, TIME_DTYPE)
     q_actives = _coerce(q_actives, TIME_DTYPE)
-    if v_blk is None:
-        v_blk = volley_block(lowering, xs.shape[0])
+    v_blk, t_blk = _plan_blocks(
+        "assign", lowering, w.shape[0], w.shape[1], w.shape[2], t_window,
+        xs.shape[0], 1, w_max, response, v_blk, t_blk,
+    )
     if not hasattr(fused_column.assign_padded, "lower"):
         # same instrumentation-seam rule as fit_padded above
         return fused_column.assign_padded(

@@ -204,15 +204,19 @@ def _fused_group_key(layer: LayerConfig):
 
 def _fused_envelopes(
     layers: list[LayerConfig],
+    n_volleys: Optional[int] = None,
+    epochs: int = 1,
 ) -> list[tuple[int, int, int]]:
     """Per-layer (p, q, t_window) padding envelope, in input order.
 
     Layers group by ``_fused_group_key``; within a group, members pack
     into shared envelopes via the central bucket policy
-    (``backend.envelope_buckets``, greedy largest-first under
-    ``backend.ENVELOPE_WASTE_CAP``) — size-compatible heterogeneous layers
-    share one compiled step, badly mismatched ones get their own envelope.
-    The same policy buckets heterogeneous design sweeps in
+    (``backend.envelope_buckets``, greedy largest-first under the plan's
+    waste cap — ``backend.ENVELOPE_WASTE_CAP`` unless a device
+    calibration plus the stream-length hint derive a break-even cap) —
+    size-compatible heterogeneous layers share one compiled step, badly
+    mismatched ones get their own envelope.  The same policy buckets
+    heterogeneous design sweeps in
     ``simulator.cluster_time_series_many``.
     """
     by_key: dict[tuple, list[int]] = {}
@@ -224,7 +228,9 @@ def _fused_envelopes(
             (layers[i].column.p, layers[i].column.q, layers[i].column.t_max)
             for i in idxs
         ]
-        for env, members in backend_lib.envelope_buckets(shapes):
+        for env, members in backend_lib.envelope_buckets(
+            shapes, n_volleys=n_volleys, epochs=epochs
+        ):
             for m in members:
                 envs[idxs[m]] = env
     return envs
@@ -236,6 +242,7 @@ def _fit_layer_fused(
     cfg: ColumnConfig,
     envelope: tuple[int, int, int],
     epochs: int,
+    plan_sink: Optional[list] = None,
 ) -> jnp.ndarray:
     """Train one layer's columns on the fused path.  [c,p,q],[N,c,p] -> [c,p,q].
 
@@ -266,6 +273,15 @@ def _fit_layer_fused(
     thresholds = jnp.full((c,), cfg.neuron.threshold, jnp.float32)
     t_maxes = jnp.full((c,), cfg.t_max, TIME_DTYPE)
     q_actives = jnp.full((c,), cfg.q, TIME_DTYPE)
+    # one ExecutionPlan per (layer, envelope): blocking comes from the
+    # roofline cost model when a calibration is active, the hand-tuned
+    # constants otherwise — fit_padded would resolve the same plan from the
+    # same inputs, so pinning v_blk/t_blk here changes nothing but lets the
+    # choice be recorded alongside the trained weights.
+    plan = backend_lib.execution_plan(
+        "fit", lowering, c, p_env, q_env, t_window, hc.shape[0], epochs,
+        w_max=cfg.neuron.w_max, response=cfg.neuron.response,
+    )
     w_new = backend_lib.fit_padded(
         w_pad, xs, thresholds, t_maxes, q_actives,
         t_window=t_window, w_max=cfg.neuron.w_max, wta_k=cfg.wta.k,
@@ -273,8 +289,10 @@ def _fit_layer_fused(
         mu_search=cfg.stdp.mu_search,
         stabilize=cfg.stdp.stabilizer == "half",
         response=cfg.neuron.response, epochs=epochs, lowering=lowering,
-        # v_blk defaults to the central backend.volley_block policy
+        v_blk=plan.v_blk, t_blk=plan.t_blk,
     )
+    if plan_sink is not None:
+        plan_sink.append(plan.meta())
     return w_new[:, : cfg.p, : cfg.q]
 
 
@@ -332,6 +350,7 @@ def fit_greedy(
     epochs: int = 8,
     mode: str = "auto",
     rng: Optional[jax.Array] = None,
+    plan_sink: Optional[list] = None,
 ) -> list:
     """Greedy layer-wise unsupervised STDP training.
 
@@ -358,6 +377,10 @@ def fit_greedy(
         and never silently defaulted for those (a loud ValueError instead);
         deterministic configs may omit it.  Fused layers are deterministic
         by contract and consume no randomness.
+      plan_sink: optional list; each fused layer appends its
+        ``ExecutionPlan.meta()`` dict (in layer order) so callers can
+        record which blocking policy trained the weights without changing
+        the returned params contract.  Solver layers append nothing.
     """
     if rng is None:
         # mirror the single-column guards: never silently substitute a
@@ -381,7 +404,11 @@ def fit_greedy(
     ]
     fused_idx = [i for i, nm in enumerate(names) if nm == "pallas"]
     env_by_layer = dict(zip(
-        fused_idx, _fused_envelopes([cfg.layers[i] for i in fused_idx])
+        fused_idx,
+        _fused_envelopes(
+            [cfg.layers[i] for i in fused_idx],
+            n_volleys=h.shape[0], epochs=epochs,
+        ),
     ))
 
     new_params = []
@@ -390,7 +417,8 @@ def fit_greedy(
         hc = _split_columns(h, layer)  # [N, c, p]
         if name == "pallas":
             w = _fit_layer_fused(
-                lp["w"], hc, layer.column, env_by_layer[li], epochs
+                lp["w"], hc, layer.column, env_by_layer[li], epochs,
+                plan_sink=plan_sink,
             )
         else:
             # copy: the scan donates its weight buffer; the caller keeps params

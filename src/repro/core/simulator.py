@@ -77,6 +77,12 @@ class ClusteringResult:
     # ladder rungs failed before the one recorded in ``lowering`` ran.
     # 0 = first-choice lowering succeeded.
     retries: int = 0
+    # ExecutionPlan metadata of the fused fit that produced these params
+    # (``ExecutionPlan.meta()``: v_blk/t_blk/shards/waste_cap/predicted
+    # step time + whether the cost model or the constants chose them);
+    # None when training took a solver path with no plan.  Observability
+    # only — a plan changes blocking, never the result recorded here.
+    plan: Optional[dict] = None
 
 
 @dataclasses.dataclass
@@ -261,7 +267,7 @@ def _sweep_bucket(
     w_init: Sequence[np.ndarray],
     epochs: int,
     lowering: str,
-) -> tuple[np.ndarray, list[jnp.ndarray], int]:
+) -> tuple[np.ndarray, list[jnp.ndarray], int, dict]:
     """Train + assign one envelope bucket of a design sweep.
 
     Pads the bucket's members into its shared (p_env, q_env, t_window)
@@ -276,7 +282,13 @@ def _sweep_bucket(
     processes once ``backend.compile_cache`` is enabled; sharded buckets
     keep the jit path so GSPMD sees the design partitioning.
 
-    Returns (assignments [Db, N], cropped per-design weights, shard count).
+    Blocking and sharding come from the bucket's ``ExecutionPlan``
+    (``backend.execution_plan``; the documented constants when no device
+    calibration is active) — observability rides along in the returned
+    plan metadata.
+
+    Returns (assignments [Db, N], cropped per-design weights, shard
+    count, plan metadata dict).
     """
     c0 = cfgs[idxs[0]]
     p_env, q_env, t_window = envelope
@@ -309,11 +321,27 @@ def _sweep_bucket(
     t_maxes = jnp.asarray([cfgs[i].t_max for i in idxs], TIME_DTYPE)
     q_actives = jnp.asarray([cfgs[i].q for i in idxs], TIME_DTYPE)
 
+    # the bucket's execution plan: blocking + sharding for this envelope
+    # (cost model when calibrated, the documented constants otherwise);
+    # returned as metadata so ClusteringResult/DSE journals record WHY
+    fit_plan = backend_lib.execution_plan(
+        "fit", lowering, db, p_env, q_env, t_window, n, epochs,
+        w_max=c0.neuron.w_max, response=c0.neuron.response,
+    )
+
     # shard the design axis across local devices: per-design work is
     # independent, so GSPMD splits the jitted scans with no collectives;
     # mesh=None (single device / indivisible Db) leaves every array put.
-    mesh = backend_lib.design_mesh(db)
-    shards = backend_lib.design_shards(db) if mesh is not None else 1
+    # The mesh is built from the plan's shard count — ONE policy output,
+    # so the recorded plan and the actual placement cannot disagree.  The
+    # legacy call shape is kept whenever the plan agrees with the default
+    # divisor policy (always, uncalibrated) so tests stubbing
+    # ``design_mesh`` to force the unsharded path keep working.
+    if fit_plan.shards == backend_lib.design_shards(db):
+        mesh = backend_lib.design_mesh(db)
+    else:
+        mesh = backend_lib.design_mesh(db, shards=fit_plan.shards)
+    shards = fit_plan.shards if mesh is not None else 1
     w0 = backend_lib.shard_design_axis(mesh, w0, axis=0)
     xs = backend_lib.shard_design_axis(mesh, xs, axis=1)
     thresholds = backend_lib.shard_design_axis(mesh, thresholds)
@@ -338,9 +366,10 @@ def _sweep_bucket(
     else:
         # sharded operands stay on the jit path: GSPMD propagates the
         # design partitioning at trace time, which a sharding-free AOT
-        # executable would not
+        # executable would not; the plan rides along as a hashable static
         w = fused_column.fit_scan_padded(
-            w0, xs, thresholds, t_maxes, q_actives, **fit_kw
+            w0, xs, thresholds, t_maxes, q_actives, plan=fit_plan,
+            **fit_kw
         )
     # assignment batches volleys (kernel grid / vmapped blocks); the kernel
     # fires on the integer weight grid, so it is only auto-selected when
@@ -368,7 +397,7 @@ def _sweep_bucket(
         jnp.asarray(w[j, : cfgs[i].p, : cfgs[i].q])
         for j, i in enumerate(idxs)
     ]
-    return asg, w_out, shards
+    return asg, w_out, shards, fit_plan.meta()
 
 
 def _eval_design_solver(
@@ -440,18 +469,19 @@ def _eval_bucket_guarded(
     bucket-mates.
 
     Returns one outcome per member, aligned with ``idxs``: either a
-    tuple ``('ok', asg, w, shards, lowering_ran, retries)`` or an
-    ``EvalFailure``.
+    tuple ``('ok', asg, w, shards, lowering_ran, retries, plan_meta)``
+    or an ``EvalFailure``.
     """
     ladder = backend_lib.lowering_ladder(lowering)
     attempts: list[tuple[str, str]] = []
     for low in ladder:
         try:
-            asg_b, w_b, shards = _sweep_bucket(
+            asg_b, w_b, shards, plan_meta = _sweep_bucket(
                 cfgs, idxs, envelope, enc, w_init, epochs, low
             )
             return [
-                ("ok", asg_b[j], w_b[j], shards, low, len(attempts))
+                ("ok", asg_b[j], w_b[j], shards, low, len(attempts),
+                 plan_meta)
                 for j in range(len(idxs))
             ]
         except Exception as e:  # noqa: BLE001 — the guard IS the feature
@@ -472,13 +502,14 @@ def _eval_bucket_guarded(
                     asg_i, w_i = _eval_design_solver(
                         c, enc[i], w_init[i], epochs
                     )
+                    plan_i = None
                 else:
-                    asg_1, w_1, _ = _sweep_bucket(
+                    asg_1, w_1, _, plan_i = _sweep_bucket(
                         cfgs, [i], (c.p, c.q, c.t_max), enc, w_init,
                         epochs, low,
                     )
                     asg_i, w_i = asg_1[0], w_1[0]
-                done = ("ok", asg_i, w_i, 1, low, len(d_attempts))
+                done = ("ok", asg_i, w_i, 1, low, len(d_attempts), plan_i)
                 break
             except Exception as e:  # noqa: BLE001
                 d_attempts.append((low, repr(e)))
@@ -644,6 +675,10 @@ def cluster_time_series_many(
     buckets = backend_lib.envelope_buckets(
         [(c.p, c.q, c.t_max) for c in cfgs],
         waste_cap=waste_cap, max_bucket=max_bucket,
+        # stream-length hint: lets a calibrated host derive the waste cap
+        # from the compile-vs-recurring-waste break-even (constants cap
+        # otherwise; an explicit waste_cap always wins either way)
+        n_volleys=series.shape[0], epochs=epochs,
     )
 
     out: list[Optional[SweepOutcome]] = [None] * d
@@ -657,11 +692,11 @@ def cluster_time_series_many(
                 cfgs, idxs, envelope, enc, w_init, epochs, lowering
             )
         else:
-            asg_b, w_b, shards = _sweep_bucket(
+            asg_b, w_b, shards, plan_meta = _sweep_bucket(
                 cfgs, idxs, envelope, enc, w_init, epochs, lowering
             )
             evals = [
-                ("ok", asg_b[j], w_b[j], shards, lowering, 0)
+                ("ok", asg_b[j], w_b[j], shards, lowering, 0, plan_meta)
                 for j in range(len(idxs))
             ]
         bucket_out: list[SweepOutcome] = []
@@ -671,7 +706,7 @@ def cluster_time_series_many(
                 out[i] = ev
                 bucket_out.append(ev)
                 continue
-            _, asg_i, w_i, shards_i, low_i, retries_i = ev
+            _, asg_i, w_i, shards_i, low_i, retries_i, plan_i = ev
             if on_error == "isolate":
                 bad = _design_guard(cfgs[i], asg_i, w_i)
                 if bad is not None:
@@ -689,6 +724,7 @@ def cluster_time_series_many(
             res = ClusteringResult(
                 np.asarray(asg_i), ri, {"w": w_i}, 0.0, "pallas", low_i,
                 buckets=n_buckets, shards=shards_i, retries=retries_i,
+                plan=plan_i,
             )
             out[i] = res
             bucket_out.append(res)
@@ -749,8 +785,10 @@ def cluster_time_series_network(
     params = network_lib.init_params(init_key, cfg, volleys.shape[-1])
 
     t0 = time.perf_counter()
+    layer_plans: list = []
     params = network_lib.fit_greedy(
-        params, volleys, cfg, epochs=epochs, mode=mode, rng=rng
+        params, volleys, cfg, epochs=epochs, mode=mode, rng=rng,
+        plan_sink=layer_plans,
     )
     assignments = np.asarray(
         network_lib.cluster_assignments(params, volleys, cfg, mode)
@@ -772,4 +810,5 @@ def cluster_time_series_network(
         # the per-layer param list rides under 'layers'
         assignments, ri, {"layers": params}, train_seconds, mode,
         ",".join(sorted(lows)),
+        plan={"layers": layer_plans} if layer_plans else None,
     )

@@ -36,6 +36,7 @@ from repro.distributed.straggler import StepMonitor
 from repro.dse import journal as journal_lib
 from repro.dse.pareto import DesignPoint, pareto_front
 from repro.dse.space import Candidate, DesignSpace, candidate_config
+from repro.roofline import costmodel
 
 
 @dataclasses.dataclass
@@ -207,6 +208,15 @@ def explore(
         )
         if backend_lib.compile_cache_dir() in (None, default_cache):
             backend_lib.compile_cache(default_cache)
+        # a device calibration saved next to the cache (costmodel.calibrate
+        # once per host) upgrades every policy seam below from the
+        # hand-tuned constants to the roofline plan.  Disk-load only —
+        # exploration never probes the device itself, so an uncalibrated
+        # host just keeps the constants fallback.
+        try:
+            costmodel.load_profile()
+        except Exception:
+            pass
     mon = monitor if monitor is not None else StepMonitor(
         threshold=4.0, warmup=3
     )
@@ -236,6 +246,7 @@ def explore(
                 shards=int(rec.get("shards", 1)),
                 fingerprint=fp,
                 retries=int(rec.get("retries", 0)),
+                plan=rec.get("plan"),
             )
         else:
             failures.append(
@@ -299,6 +310,7 @@ def explore(
                     shards=r.shards,
                     fingerprint=fps[gi],
                     retries=r.retries,
+                    plan=r.plan,
                 )
                 points[gi] = p
                 recs.append(
@@ -316,6 +328,7 @@ def explore(
                         "buckets": p.buckets,
                         "shards": p.shards,
                         "retries": p.retries,
+                        "plan": p.plan,
                         "w": np.asarray(r.params["w"], np.float32).tolist(),
                     }
                 )
@@ -366,6 +379,9 @@ def explore(
             "stalls": [dataclasses.asdict(ev) for ev in mon.events],
             "resumed": resumed,
             "journal": jr.path if jr is not None else None,
+            # '' = constants fallback; otherwise the calibrated
+            # DeviceProfile whose cost model chose every bucket's blocking
+            "profile": getattr(costmodel.profile(), "name", ""),
         },
     )
 

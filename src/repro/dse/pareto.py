@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Sequence
+from typing import Optional, Sequence
 
 from repro.core.types import ColumnConfig
 
@@ -42,6 +42,10 @@ class DesignPoint:
     # first-choice lowering succeeded).
     fingerprint: str = ""
     retries: int = 0
+    # ExecutionPlan.meta() of the fit that trained this design's bucket
+    # (None when the cycle-solver fallback trained it, or on rows
+    # restored from a pre-plan journal).
+    plan: Optional[dict] = None
 
 
 def dominates(a: DesignPoint, b: DesignPoint) -> bool:

@@ -819,7 +819,7 @@ def _fused_fit_scan(
     jax.jit,
     static_argnames=(
         "t_window", "w_max", "wta_k", "stabilize", "response", "epochs",
-        "lowering", "t_blk", "v_blk",
+        "lowering", "t_blk", "v_blk", "plan",
     ),
     donate_argnums=(0,),
 )
@@ -839,8 +839,9 @@ def fit_scan_padded(
     response: str,
     epochs: int,
     lowering: str = "reference",
-    t_blk: int = 128,
+    t_blk: int | None = None,
     v_blk: int | None = None,
+    plan=None,
 ):
     """All designs x all epochs x all volleys in ONE compiled program.
 
@@ -874,11 +875,21 @@ def fit_scan_padded(
         than hardcoding a host assumption; the kernel lowerings support RNL
         only (``check_fusable``).  All lowerings are bit-identical on
         integer weight grids.
-      t_blk: kernel time-block length (kernel lowerings only).
-      v_blk: volleys advanced per scan step; None defers to the central
-        policy ``repro.core.backend.volley_block(lowering, n, d=D)`` —
+      t_blk: kernel time-block length (kernel lowerings only); None takes
+        the plan's choice (or the lane-aligned 128 default).
+      v_blk: volleys advanced per scan step; None takes the plan's
+        choice, falling back to the central constants policy
+        ``repro.core.backend.volley_block(lowering, n, d=D)`` —
         envelope-aware, so small-D batches get a slimmer unrolled
         reference block (cheap traces) than large-D ones.
+      plan: an optional ``repro.roofline.costmodel.ExecutionPlan`` (a
+        frozen, hashable static) supplying defaults for unset
+        ``v_blk``/``t_blk``.  Callers that dispatch through
+        ``backend.fit_padded`` never need it (the backend resolves the
+        plan to concrete ints before keying its AOT cache); it exists for
+        direct jit-path callers — notably the sharded bucketed sweep,
+        where GSPMD needs the jit trace.  A plan changes blocking only,
+        never results (value-equal plans share one trace).
 
     This entry point is deterministic — expected-mode STDP and index
     tie-break WTA need no PRNG key (that is part of the fused contract;
@@ -900,6 +911,13 @@ def fit_scan_padded(
         # zero training passes are well-defined: the weights are returned
         # unchanged (trivially, without building the blocked scan)
         return w
+    if plan is not None:
+        if v_blk is None:
+            v_blk = plan.v_blk
+        if t_blk is None:
+            t_blk = plan.t_blk
+    if t_blk is None:
+        t_blk = 128
     if v_blk is None:
         from repro.core import backend  # late: backend imports this module
 
@@ -1059,13 +1077,14 @@ def _ids_from_times(t_fire, t_maxes, q_actives):
 @functools.partial(
     jax.jit,
     static_argnames=("t_window", "wta_k", "response", "lowering", "t_blk",
-                     "v_blk", "w_max"),
+                     "v_blk", "w_max", "plan"),
 )
 def assign_padded(
     w, xs, thresholds, t_maxes, q_actives,
     t_window: int, wta_k: int, response: str,
-    lowering: str = "reference", t_blk: int = 128,
+    lowering: str = "reference", t_blk: int | None = None,
     v_blk: int | None = None, w_max: int | None = None,
+    plan=None,
 ):
     """Cluster ids for every padded design: [N, D, p_pad] -> [D, N].
 
@@ -1085,6 +1104,10 @@ def assign_padded(
     live-neuron count ``q_active`` when no neuron spikes (the 'unclustered'
     bucket); it is independent of ``wta_k`` (the k-WTA keeps the global
     minimum for every k >= 1).
+
+    ``plan`` carries the same optional ``ExecutionPlan`` defaults as
+    ``fit_scan_padded`` (unset ``v_blk``/``t_blk`` only; blocking, never
+    semantics).
     """
     if lowering not in LOWERINGS:
         raise ValueError(f"unknown lowering: {lowering!r}")
@@ -1095,6 +1118,13 @@ def assign_padded(
             "assign_padded needs at least one volley (got an empty "
             "stream, N=0)"
         )
+    if plan is not None:
+        if v_blk is None:
+            v_blk = plan.v_blk
+        if t_blk is None:
+            t_blk = plan.t_blk
+    if t_blk is None:
+        t_blk = 128
     if v_blk is None:
         from repro.core import backend  # late: backend imports this module
 

@@ -1,9 +1,11 @@
 """Three-term roofline analysis over the dry-run artifacts (§Roofline).
 
-Hardware model (TPU v5e targets, per chip):
-    PEAK_FLOPS = 197e12   bf16 FLOP/s
-    HBM_BW     = 819e9    B/s
-    LINK_BW    = 50e9     B/s per ICI link
+Hardware model: the peaks come from a ``costmodel.DeviceProfile`` — the
+*active* device calibration when one is loaded (``costmodel.calibrate`` /
+``load_profile``), the named ``'tpu-v5e'`` default profile otherwise:
+    PEAK_FLOPS = 197e12   bf16 FLOP/s   (v5e default)
+    HBM_BW     = 819e9    B/s           (v5e default)
+    LINK_BW    = 50e9     B/s per ICI link (v5e default)
 
 Terms, in seconds per step (all quantities are PER DEVICE — XLA's
 ``cost_analysis`` reports the per-device SPMD module, and the collective
@@ -31,11 +33,36 @@ import json
 import os
 from typing import Optional
 
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-LINK_BW = 50e9
+from repro.roofline import costmodel
+
+# Module-level constants stay as the NAMED DEFAULT profile's numbers
+# (import-time snapshot of costmodel.PROFILES['tpu-v5e']) for callers that
+# want the classic v5e targets; analysis itself resolves peaks per call
+# through peaks(), which prefers the active device calibration.
+_DEFAULT_PROFILE = costmodel.PROFILES["tpu-v5e"]
+PEAK_FLOPS = _DEFAULT_PROFILE.peak_flops
+HBM_BW = _DEFAULT_PROFILE.hbm_bw
+LINK_BW = _DEFAULT_PROFILE.link_bw
 
 RESULTS_DIR = "results/dryrun"
+
+
+def peaks(
+    prof: Optional[costmodel.DeviceProfile] = None,
+) -> tuple[float, float, float, str]:
+    """``(peak_flops, hbm_bw, link_bw, profile_name)`` for the analysis.
+
+    Resolution order: explicit ``prof`` argument, then the active
+    calibration (``costmodel.profile()``), then the ``'tpu-v5e'`` default.
+    A calibrated single-host profile has no measured interconnect, so a
+    zero/unset ``link_bw`` falls back to the v5e ICI number rather than
+    dividing by zero.
+    """
+    p = prof if prof is not None else costmodel.profile()
+    if p is None:
+        p = _DEFAULT_PROFILE
+    link = p.link_bw if p.link_bw and p.link_bw > 0 else _DEFAULT_PROFILE.link_bw
+    return p.peak_flops, p.hbm_bw, link, p.name
 
 
 @dataclasses.dataclass
@@ -57,6 +84,9 @@ class RooflineRow:
     fraction_fused: float = 0.0
     peak_mem_gb: float = 0.0
     note: str = ""
+    # which DeviceProfile supplied the peaks ('tpu-v5e' default, or the
+    # host's calibration when one is active)
+    profile: str = ""
 
     @property
     def bound_s(self) -> float:
@@ -89,9 +119,10 @@ def analyze_cell(cell: dict) -> RooflineRow:
         "total", 0.0
     )
     n = cell["n_chips"]
-    compute_s = flops / PEAK_FLOPS
-    memory_s = byts / HBM_BW
-    collective_s = coll / LINK_BW
+    peak_flops, hbm_bw, link_bw, prof_name = peaks()
+    compute_s = flops / peak_flops
+    memory_s = byts / hbm_bw
+    collective_s = coll / link_bw
     terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
     dominant = max(terms, key=terms.get)
     # MODEL_FLOPS (standard convention): training = 6*N_active per token
@@ -108,7 +139,7 @@ def analyze_cell(cell: dict) -> RooflineRow:
         model_flops = 2.0 * n_active * sh.global_batch
     hlo_global = flops * n
     useful = model_flops / hlo_global if hlo_global else 0.0
-    useful_time = model_flops / (n * PEAK_FLOPS)
+    useful_time = model_flops / (n * peak_flops)
     bound = max(terms.values())
     frac = useful_time / bound if bound else 0.0
     mem = cell.get("memory_analysis", {})
@@ -140,7 +171,7 @@ def analyze_cell(cell: dict) -> RooflineRow:
         + mem.get("output_size_in_bytes", 0)
         + boundary
     )
-    memory_min_s = min_bytes / HBM_BW
+    memory_min_s = min_bytes / hbm_bw
     bound_fused = max(compute_s, memory_min_s, collective_s)
     frac_fused = useful_time / bound_fused if bound_fused else 0.0
     return RooflineRow(
@@ -152,6 +183,7 @@ def analyze_cell(cell: dict) -> RooflineRow:
         useful_ratio=useful, roofline_fraction=frac,
         fraction_fused=frac_fused,
         peak_mem_gb=peak / 1e9,
+        profile=prof_name,
     )
 
 

@@ -152,6 +152,10 @@ class ServeStats:
     snapshots: int        # snapshots published this process
     wal_records: int      # WAL re-fits not yet covered by a snapshot
     replayed: int         # WAL re-fits replayed during recover()
+    # per-bucket ExecutionPlan.meta() dicts — ({assign}, {fit|None}) per
+    # bucket; 'source' says whether the roofline cost model or the
+    # constants fallback chose each bucket's blocking
+    plans: tuple = ()
 
 
 class PendingRequest:
@@ -210,6 +214,12 @@ class _Bucket:
         )
         self.queue: list[_Request] = []
         self.buffers: list[list[np.ndarray]] = [[] for _ in cfgs]
+        # ExecutionPlans for this bucket's two compiled shapes (filled in
+        # by the service right after construction — it owns the batch /
+        # re-fit geometry).  Reporting only: the backend re-derives the
+        # identical plan inside assign_padded / fit_padded.
+        self.asg_plan = None
+        self.fit_plan = None
         self.served_since_refit = 0
         # degraded-mode state: after every ladder rung fails a re-fit
         # window, the bucket keeps serving from the last-good weights and
@@ -388,6 +398,24 @@ class ClusteringService:
                 bi, env, [names[i] for i in members],
                 [cfgs[i] for i in members], jnp.asarray(w0),
             )
+            # record which blocking policy this bucket's executables will
+            # resolve to (cost-model plan when a calibration is active,
+            # constants otherwise) — assign_padded / fit_padded re-derive
+            # the same plan from the same inputs at dispatch time
+            bucket.asg_plan = backend_lib.execution_plan(
+                "assign", bucket.asg_lowering, len(members),
+                p_env, q_env, t_window, self.batch_size, 1,
+                w_max=self._statics["w_max"],
+                response=self._statics["response"],
+            )
+            if self.refit_every > 0:
+                bucket.fit_plan = backend_lib.execution_plan(
+                    "fit", bucket.fit_lowering, len(members),
+                    p_env, q_env, t_window,
+                    self.refit_window, self.refit_epochs,
+                    w_max=self._statics["w_max"],
+                    response=self._statics["response"],
+                )
             self._buckets.append(bucket)
             for lane, i in enumerate(members):
                 self._route[names[i]] = (bucket, lane)
@@ -575,6 +603,8 @@ class ClusteringService:
                 ),
                 "degraded": b.degraded,
                 "cooldown": b.cooldown,
+                "assign_plan": b.asg_plan.meta() if b.asg_plan else None,
+                "fit_plan": b.fit_plan.meta() if b.fit_plan else None,
             }
             for b in self._buckets
         ]
@@ -606,6 +636,13 @@ class ClusteringService:
             snapshots=self._snapshots,
             wal_records=self._store.pending if self._store else 0,
             replayed=self._replayed,
+            plans=tuple(
+                (
+                    b.asg_plan.meta() if b.asg_plan else None,
+                    b.fit_plan.meta() if b.fit_plan else None,
+                )
+                for b in self._buckets
+            ),
         )
 
     # ------------------------------------------------------------ warmup
